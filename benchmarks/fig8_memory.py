@@ -1,0 +1,32 @@
+"""Paper Fig. 8 (left): memory-access reduction of HUGE2 vs the naive
+zero-insertion + im2col engine, per DCGAN / cGAN layer — analytic byte
+counts from the traffic model in core/reference.py (paper reports 30-70%)."""
+from __future__ import annotations
+
+from benchmarks.util import csv_row
+from repro.core.reference import memory_reduction_transpose
+from repro.models.gan import CGAN_LAYERS, DCGAN_LAYERS
+
+BATCH = 1
+
+
+def main(print_csv=True):
+    rows = []
+    for gan, layers in (("DCGAN", DCGAN_LAYERS), ("cGAN", CGAN_LAYERS)):
+        for i, l in enumerate(layers):
+            m = memory_reduction_transpose(
+                BATCH, l.in_hw, l.in_hw, l.in_c, l.kernel, l.kernel, l.out_c,
+                l.stride)
+            rows.append(csv_row(
+                f"fig8_mem_{gan}_DC{i + 1}", 0.0,
+                f"naive_bytes={int(m['naive_bytes'])} "
+                f"huge_bytes={int(m['huge_bytes'])} "
+                f"reduction={m['reduction'] * 100:.1f}%"))
+    if print_csv:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

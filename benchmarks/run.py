@@ -1,0 +1,33 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Run:
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the slow wall-clock benches")
+    args = ap.parse_args()
+
+    from benchmarks import table1_layers, fig8_memory
+    print("# paper Table 1 — layer configs + MAC reduction")
+    table1_layers.main()
+    print("# paper Fig 8 (left) — memory-access reduction (analytic bytes)")
+    fig8_memory.main()
+    if not args.quick:
+        from benchmarks import dilated_conv, fig7_speedup, fig8_training
+        print("# paper Fig 7 — inference speedup vs naive engine (CPU wall-clock)")
+        fig7_speedup.main()
+        print("# paper Fig 8 (right) — GAN training speedup (engine VJPs)")
+        fig8_training.main()
+        print("# paper §3.2.2 — dilated (atrous) conv, untangled vs naive")
+        dilated_conv.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Architecture registry: ``--arch <id>`` resolution for all launchers."""
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "mamba2-130m": "repro.configs.mamba2_130m",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "gemma3-1b": "repro.configs.gemma3_1b",
+    "glm4-9b": "repro.configs.glm4_9b",
+    "llama3.2-1b": "repro.configs.llama32_1b",
+    "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "seamless-m4t-large-v2": "repro.configs.seamless_m4t_large_v2",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(name: str):
+    return importlib.import_module(_MODULES[name]).config()
+
+
+def get_reduced(name: str):
+    return importlib.import_module(_MODULES[name]).reduced()
+
+
+def shape_applicable(cfg, shape) -> tuple[bool, str]:
+    """Which (arch x shape) cells run — skips recorded in EXPERIMENTS.md."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "full-attention arch: 512k dense-KV decode skipped per brief"
+    return True, ""

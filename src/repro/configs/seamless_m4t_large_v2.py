@@ -1,0 +1,34 @@
+"""seamless-m4t-large-v2 [audio] — encoder-decoder, multimodal,
+arXiv:2308.11596.  24L enc + 24L dec, d_model=1024 16H (kv=16) d_ff=8192
+vocab=256206.
+
+The speech/text frontend is a STUB: ``input_specs()`` supplies precomputed
+source frame embeddings (B, S_src, d_model); the transformer backbone
+(self-attn encoder, causal decoder with cross-attention) is implemented in
+full.  Decode shapes exercise the decoder with a 3072-frame source memory.
+"""
+from repro.configs.base import ModelConfig, uniform_stages
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-large-v2", family="audio", num_layers=48,
+        d_model=1024, num_heads=16, num_kv_heads=16, head_dim=64, d_ff=8192,
+        vocab_size=256206,
+        stages=uniform_stages("dec", 24),
+        encoder_stages=uniform_stages("enc", 24),
+        is_encoder_decoder=True, frontend="audio_stub",
+        rope_theta=1e4, norm_eps=1e-5, act="gelu",
+    )
+
+
+SRC_FRAMES = 3072            # stub source length for decode/prefill shapes
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        config(), num_layers=4, d_model=64, num_heads=4, num_kv_heads=4,
+        head_dim=16, d_ff=128, vocab_size=512,
+        stages=uniform_stages("dec", 2),
+        encoder_stages=uniform_stages("enc", 2))

@@ -1,0 +1,14 @@
+"""HUGE² core: phase decomposition + untangling of deconvolutions."""
+from repro.core.decompose import (decompose_kernel, interleave_phases,
+                                  plan_phases_1d, transposed_out_size)
+from repro.core.engine import (huge_conv2d, huge_conv_transpose2d,
+                               huge_dilated_conv2d)
+from repro.core.untangle import (untangled_conv2d, untangled_depthwise_conv1d)
+from repro.core import reference
+
+__all__ = [
+    "decompose_kernel", "interleave_phases", "plan_phases_1d",
+    "transposed_out_size", "huge_conv2d", "huge_conv_transpose2d",
+    "huge_dilated_conv2d", "untangled_conv2d", "untangled_depthwise_conv1d",
+    "reference",
+]

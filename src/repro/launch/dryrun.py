@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("REPRO_DRYRUN", "1")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on the
+production mesh with 512 placeholder host devices; record memory_analysis,
+cost_analysis and the parsed collective schedule for §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all [--mesh both] [--force]
+
+Results append incrementally to results/dryrun/<arch>__<shape>__<mesh>.json
+so a long sweep is restartable.
+"""
+import argparse       # noqa: E402
+import json           # noqa: E402
+import time           # noqa: E402
+import traceback      # noqa: E402
+
+import jax            # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import registry                      # noqa: E402
+from repro.configs.base import SHAPES                   # noqa: E402
+from repro.launch import hlo_analysis                   # noqa: E402
+from repro.launch import roofline as rl                 # noqa: E402
+from repro.launch import specs as specs_lib             # noqa: E402
+from repro.launch import steps as steps_lib             # noqa: E402
+from repro.launch.mesh import make_production_mesh      # noqa: E402
+from repro.models import transformer as tfm             # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _mem_dict(mem) -> dict:
+    return {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "generated_code_bytes": mem.generated_code_size_in_bytes,
+    }
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, *,
+               seq_parallel: bool = False, grad_accum: int = 0,
+               kv_chunk: int = 0, remat: bool = True,
+               parallelism: str = "auto"):
+    """Build + lower + compile one cell; returns (record, compiled)."""
+    cfg = registry.get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = registry.shape_applicable(cfg, shape)
+    if not ok:
+        return {"skipped": reason}, None
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    dist = steps_lib.make_dist(mesh, cfg, shape, seq_parallel=seq_parallel,
+                               parallelism=parallelism)
+    kv_chunk = kv_chunk or (2048 if shape.seq_len > 8192 else 1024)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            accum = grad_accum or steps_lib.default_grad_accum(cfg, shape)
+            opt_cfg = steps_lib.opt_config_for(cfg)
+            state_sds, state_sh, grad_sh = steps_lib.train_state_specs(
+                cfg, dist, opt_cfg)
+            # huge MoEs: bf16 grad accumulation (f32 accum alone is 10.5
+            # GB/chip for 671B even fully sharded) — documented in DESIGN.md
+            acc_dt = (jnp.bfloat16 if cfg.name in
+                      ("deepseek-v3-671b", "dbrx-132b") else jnp.float32)
+            step_fn = steps_lib.make_train_step(cfg, dist, opt_cfg,
+                                                grad_accum=accum,
+                                                kv_chunk=kv_chunk,
+                                                accum_dtype=acc_dt,
+                                                grad_shardings=grad_sh,
+                                                remat=remat)
+            batch_sds, batch_logical = specs_lib.batch_specs(cfg, shape)
+            batch_sh = {k: dist.sharding(v) for k, v in batch_logical.items()}
+            metrics_sh = {"loss": NamedSharding(mesh, P()),
+                          "gnorm": NamedSharding(mesh, P())}
+            lowered = jax.jit(
+                step_fn, in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, metrics_sh),
+                donate_argnums=(0,)).lower(state_sds, batch_sds)
+            extra = {"grad_accum": accum, "optimizer": opt_cfg.name}
+        elif shape.kind == "prefill":
+            step_fn = steps_lib.make_prefill_step(cfg, dist, kv_chunk=kv_chunk)
+            p_sds, p_logical = specs_lib.param_specs(cfg)
+            p_sh = dist.param_shardings(p_logical)
+            batch_sds, batch_logical = specs_lib.batch_specs(cfg, shape)
+            batch_sh = {k: dist.sharding(v) for k, v in batch_logical.items()}
+            lowered = jax.jit(
+                step_fn, in_shardings=(p_sh, batch_sh)).lower(p_sds, batch_sds)
+            extra = {}
+        else:  # decode
+            step_fn = steps_lib.make_serve_step(cfg, dist)
+            p_sds, p_logical = specs_lib.param_specs(cfg)
+            p_sh = dist.param_shardings(p_logical)
+            cache_sds, cache_logical = specs_lib.cache_specs(cfg, shape)
+            cache_sh = jax.tree.map(
+                lambda sp: dist.sharding(sp), cache_logical,
+                is_leaf=lambda x: isinstance(x, P))
+            tok, tok_l, mem_s, mem_l = specs_lib.decode_specs(cfg, shape)
+            idx = jax.ShapeDtypeStruct((), jnp.int32)
+            args = [p_sds, cache_sds, tok, idx]
+            shardings = [p_sh, cache_sh, dist.sharding(tok_l),
+                         NamedSharding(mesh, P())]
+            if mem_s is not None:
+                args.append(mem_s)
+                shardings.append(dist.sharding(mem_l))
+            lowered = jax.jit(
+                step_fn, in_shardings=tuple(shardings),
+                donate_argnums=(1,)).lower(*args)
+            extra = {}
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    t0 = time.time()
+    # loop-aware analysis (XLA's cost_analysis counts while bodies once)
+    hc = hlo_analysis.analyze(hlo, default_group=chips)
+    t_analyze = time.time() - t0
+    model_flops = rl.model_flops_for(cfg, shape)
+    # HLO totals are whole-program across chips; collectives per participant.
+    roof = rl.roofline_from(
+        {"flops": hc["flops"], "bytes accessed": hc["hbm_bytes"]},
+        {"total": hc["coll_total"]}, chips, model_flops)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "seq_parallel": seq_parallel, "kv_chunk": kv_chunk,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "analyze_s": round(t_analyze, 1),
+        "memory": _mem_dict(mem),
+        # memory_analysis() reports the PER-DEVICE program's buffers
+        "bytes_per_chip": (mem.argument_size_in_bytes
+                           + mem.temp_size_in_bytes
+                           + mem.output_size_in_bytes
+                           - mem.alias_size_in_bytes),
+        "xla_cost_analysis": {k: cost[k] for k in ("flops", "bytes accessed")
+                              if k in cost},
+        "collectives": {"per_kind": hc["coll_per_kind"],
+                        "total": hc["coll_total"],
+                        "num_ops": hc["num_collectives"]},
+        "roofline": roof.to_dict(),
+        **extra,
+    }
+    return rec, compiled
+
+
+def cell_path(arch, shape_name, multi_pod, tag=""):
+    mesh = "multi" if multi_pod else "single"
+    sfx = f"__{tag}" if tag else ""
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape_name}__{mesh}{sfx}.json")
+
+
+def run_cell(arch, shape_name, multi_pod, force=False, tag="", **kw):
+    out = cell_path(arch, shape_name, multi_pod, tag)
+    if os.path.exists(out) and not force:
+        print(f"[skip-cached] {out}")
+        return json.load(open(out))
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    print(f"[dryrun] {arch} x {shape_name} x "
+          f"{'2x16x16' if multi_pod else '16x16'} ...", flush=True)
+    try:
+        rec, compiled = lower_cell(arch, shape_name, multi_pod, **kw)
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+        with open(out + ".err", "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[FAIL] {arch} {shape_name}: {e}", flush=True)
+        return rec
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    if "skipped" in rec:
+        print(f"[skip] {arch} {shape_name}: {rec['skipped']}", flush=True)
+    else:
+        r = rec["roofline"]
+        print(f"[ok] lower {rec['lower_s']}s compile {rec['compile_s']}s | "
+              f"compute {r['compute_s']:.3e}s memory {r['memory_s']:.3e}s "
+              f"collective {r['collective_s']:.3e}s -> {r['dominant']}",
+              flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=registry.ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=0)
+    ap.add_argument("--kv-chunk", type=int, default=0)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--parallelism", choices=("auto", "dp_only"),
+                    default="auto")
+    ap.add_argument("--tag", default="", help="suffix for the result file "
+                    "(hillclimb variants keep the baseline intact)")
+    args = ap.parse_args()
+
+    archs = registry.ARCH_IDS if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(SHAPES) if (args.all or not args.shape) else (args.shape,)
+    meshes = {"single": (False,), "multi": (True,),
+              "both": (False, True)}[args.mesh]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                run_cell(arch, shape, mp, force=args.force, tag=args.tag,
+                         seq_parallel=args.seq_parallel,
+                         grad_accum=args.grad_accum,
+                         kv_chunk=args.kv_chunk,
+                         remat=not args.no_remat,
+                         parallelism=args.parallelism)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,359 @@
+"""Loop-aware cost analysis over compiled (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scan-over-layers / grad-accum / remat program under-reports FLOPs, bytes and
+collectives by orders of magnitude (we measured 1822x on llama3.2-1b).  This
+module re-derives the three roofline inputs by walking the HLO computation
+graph with loop trip counts:
+
+  flops        — dot / convolution ops (elementwise excluded, documented)
+  hbm bytes    — per codegen unit (fusion boundary): operands + results
+  collectives  — ring-traffic bytes per participant (see roofline.py)
+
+Trip counts come from the scan-lowered ``while`` condition (compare against a
+constant).  All loops in this codebase are static-bound scans, so this is
+exact here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "opaque": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INST_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*?)\)(.*)$")
+# header: "%name (args) -> ret {"; args may contain nested parens (tuples)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+_ZERO_COST = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "add-dependency", "partition-id", "replica-id", "iota",
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _parse_shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _parse_dims(type_str: str) -> Optional[tuple[str, list[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Inst:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list
+    args: str
+    attrs: str
+
+
+def parse_module(text: str) -> dict[str, list[Inst]]:
+    comps: dict[str, list[Inst]] = {}
+    cur: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INST_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, args, attrs = m.groups()
+        operands = _OPERAND_RE.findall(args)
+        comps[cur].append(Inst(name, type_str, opcode, operands, args, attrs))
+    return comps
+
+
+class HloCost:
+    def __init__(self, text: str, default_group: int):
+        self.comps = parse_module(text)
+        self.default_group = default_group
+        self.shapes: dict[str, dict[str, str]] = {
+            c: {i.name: i.type_str for i in insts}
+            for c, insts in self.comps.items()
+        }
+        self._memo: dict[str, tuple] = {}
+        self.entry = self._find_entry(text)
+
+    def _find_entry(self, text: str) -> str:
+        m = re.search(r"ENTRY\s+%?([\w\.\-]+)", text)
+        if m:
+            return m.group(1)
+        return next(iter(self.comps)) if self.comps else ""
+
+    # -- trip counts ---------------------------------------------------------
+    def trip_count(self, cond_comp: str) -> int:
+        """Static bound of a scan-lowered while: the integer constant the
+        induction variable is compared against (induction starts at 0 for
+        every lax.scan here).  Fallback: largest int constant in the cond."""
+        insts = self.comps.get(cond_comp, [])
+        consts: dict[str, int] = {}
+        for i in insts:
+            if i.opcode == "constant":
+                m = re.match(r"^(-?\d+)$", i.args.strip())
+                if m:
+                    consts[i.name] = int(m.group(1))
+        for i in insts:
+            if i.opcode == "compare":
+                for op in i.operands:
+                    if op in consts and consts[op] > 0:
+                        return consts[op]
+        pos = [v for v in consts.values() if v > 0]
+        return max(pos) if pos else 1
+
+    # -- per-instruction costs ----------------------------------------------
+    def _dot_flops(self, comp: str, inst: Inst) -> float:
+        out = _parse_dims(inst.type_str)
+        if out is None:
+            return 0.0
+        _, out_dims = out
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.attrs)
+        lhs_t = self.shapes[comp].get(inst.operands[0]) if inst.operands else None
+        if lhs_t is None or m is None:
+            return 0.0
+        lhs = _parse_dims(lhs_t)
+        if lhs is None:
+            return 0.0
+        _, lhs_dims = lhs
+        k = 1
+        for d in m.group(1).split(","):
+            if d:
+                k *= lhs_dims[int(d)]
+        n_out = 1
+        for d in out_dims:
+            n_out *= d
+        return 2.0 * n_out * k
+
+    def _conv_flops(self, comp: str, inst: Inst) -> float:
+        out = _parse_dims(inst.type_str)
+        rhs_t = self.shapes[comp].get(inst.operands[1]) if len(inst.operands) > 1 else None
+        if out is None or rhs_t is None:
+            return 0.0
+        _, out_dims = out
+        rhs = _parse_dims(rhs_t)
+        if rhs is None:
+            return 0.0
+        _, rhs_dims = rhs
+        m = re.search(r"dim_labels=([\w\d]+)_([\w\d]+)->", inst.attrs)
+        n_out = 1
+        for d in out_dims:
+            n_out *= d
+        # kernel contribution: product of rhs dims except output-feature dim
+        if m:
+            rhs_labels = m.group(2)
+            k = 1
+            for lab, dim in zip(rhs_labels, rhs_dims):
+                if lab != "o":
+                    k *= dim
+        else:
+            k = 1
+            for dim in rhs_dims[:-1]:
+                k *= dim
+        feat_div = 1
+        gm = re.search(r"feature_group_count=(\d+)", inst.attrs)
+        if gm:
+            feat_div = int(gm.group(1))
+        return 2.0 * n_out * k / feat_div
+
+    def _group_size(self, attrs: str) -> int:
+        m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+        if m:
+            return int(m.group(2))
+        m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+        if m:
+            return len(m.group(1).split(","))
+        m = re.search(r"source_target_pairs=", attrs)
+        if m:
+            return 2
+        return self.default_group
+
+    def _coll_traffic(self, comp: str, inst: Inst) -> tuple[str, float]:
+        kind = inst.opcode.replace("-start", "")
+        size = _parse_shape_bytes(inst.type_str)
+        if kind == "all-gather" and inst.type_str.startswith("("):
+            pass
+        n = self._group_size(inst.attrs)
+        if n <= 1:
+            return kind, 0.0
+        if kind == "all-reduce":
+            t = 2.0 * size * (n - 1) / n
+        elif kind == "all-gather":
+            t = size * (n - 1) / n
+        elif kind == "reduce-scatter":
+            t = float(size) * (n - 1)
+        elif kind == "all-to-all":
+            t = size * (n - 1) / n
+        else:
+            t = float(size)
+        return kind, t
+
+    def _io_bytes(self, comp: str, inst: Inst) -> float:
+        b = _parse_shape_bytes(inst.type_str)
+        for op in inst.operands:
+            t = self.shapes[comp].get(op)
+            if t:
+                b += _parse_shape_bytes(t)
+        return float(b)
+
+    # -- recursive computation cost -------------------------------------------
+    def cost(self, comp: Optional[str] = None) -> dict:
+        comp = comp or self.entry
+        if comp in self._memo:
+            return self._memo[comp]
+        flops = 0.0
+        hbm = 0.0
+        by_op: dict[str, float] = {}
+        coll: dict[str, float] = {}
+        n_coll = 0
+        for inst in self.comps.get(comp, []):
+            op = inst.opcode
+            if op in _ZERO_COST:
+                continue
+            base = op.replace("-start", "")
+            if op == "while":
+                body = cond = None
+                mb = re.search(r"body=%?([\w\.\-]+)", inst.attrs)
+                mc = re.search(r"condition=%?([\w\.\-]+)", inst.attrs)
+                if mb:
+                    body = mb.group(1)
+                if mc:
+                    cond = mc.group(1)
+                # XLA records the exact bound when it can prove it
+                mt = re.search(r'known_trip_count[^0-9]*(\d+)', inst.attrs)
+                if mt:
+                    trips = int(mt.group(1))
+                else:
+                    trips = self.trip_count(cond) if cond else 1
+                sub = self.cost(body) if body else None
+                if sub:
+                    flops += sub["flops"] * trips
+                    hbm += sub["hbm_bytes"] * trips
+                    for k, v in sub["coll"].items():
+                        coll[k] = coll.get(k, 0.0) + v * trips
+                    for k, v in sub["by_op"].items():
+                        by_op[k] = by_op.get(k, 0.0) + v * trips
+                    n_coll += sub["n_coll"] * trips
+                continue
+            if op in ("fusion", "call", "conditional", "custom-call",
+                      "reduce", "sort", "map", "scatter", "select-and-scatter"):
+                b = self._io_bytes(comp, inst)
+                hbm += b
+                by_op[op] = by_op.get(op, 0.0) + b
+                for cc in _CALLS_RE.findall(inst.attrs):
+                    if cc in self.comps and op != "fusion":
+                        sub = self.cost(cc)
+                        flops += sub["flops"]
+                        for k, v in sub["coll"].items():
+                            coll[k] = coll.get(k, 0.0) + v
+                        n_coll += sub["n_coll"]
+                if op == "fusion":
+                    # count dots inside fusions (flops only; bytes at boundary)
+                    for cc in _CALLS_RE.findall(inst.attrs):
+                        if cc in self.comps:
+                            flops += self._inner_dot_flops(cc)
+                continue
+            if base in _COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                kind, t = self._coll_traffic(comp, inst)
+                coll[kind] = coll.get(kind, 0.0) + t
+                n_coll += 1
+                b = self._io_bytes(comp, inst)
+                hbm += b
+                by_op[base] = by_op.get(base, 0.0) + b
+                continue
+            if op == "dot":
+                flops += self._dot_flops(comp, inst)
+                b = self._io_bytes(comp, inst)
+                hbm += b
+                by_op["dot"] = by_op.get("dot", 0.0) + b
+                continue
+            if op == "convolution":
+                flops += self._conv_flops(comp, inst)
+                b = self._io_bytes(comp, inst)
+                hbm += b
+                by_op["convolution"] = by_op.get("convolution", 0.0) + b
+                continue
+            # remaining real ops (copy, dynamic-slice, broadcast, ...)
+            b = self._io_bytes(comp, inst)
+            hbm += b
+            by_op[op] = by_op.get(op, 0.0) + b
+        out = {"flops": flops, "hbm_bytes": hbm, "coll": coll,
+               "n_coll": n_coll, "by_op": by_op}
+        self._memo[comp] = out
+        return out
+
+    def _inner_dot_flops(self, comp: str) -> float:
+        f = 0.0
+        for inst in self.comps.get(comp, []):
+            if inst.opcode == "dot":
+                f += self._dot_flops(comp, inst)
+            elif inst.opcode == "convolution":
+                f += self._conv_flops(comp, inst)
+        return f
+
+
+def top_buffers(text: str, k: int = 20) -> list[tuple[float, str, str]]:
+    """Largest instruction results (GB, computation, 'opcode type') — the
+    bisect tool for memory-dominated cells.  Loop-carried buffers inside a
+    while body appear once (they are reused across iterations)."""
+    comps = parse_module(text)
+    rows = []
+    for cname, insts in comps.items():
+        for i in insts:
+            if i.opcode in ("parameter", "get-tuple-element", "tuple"):
+                continue
+            b = _parse_shape_bytes(i.type_str)
+            if b > 0:
+                rows.append((b / 1e9, cname,
+                             f"{i.opcode} {i.type_str[:70]}"))
+    rows.sort(reverse=True)
+    return rows[:k]
+
+
+def analyze(text: str, default_group: int) -> dict:
+    hc = HloCost(text, default_group)
+    c = hc.cost()
+    return {
+        "flops": c["flops"],
+        "hbm_bytes": c["hbm_bytes"],
+        "coll_per_kind": c["coll"],
+        "coll_total": sum(c["coll"].values()),
+        "num_collectives": c["n_coll"],
+        "hbm_by_op": dict(sorted(c["by_op"].items(),
+                                 key=lambda kv: -kv[1])[:12]),
+    }

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level state) so importing never touches jax device
+initialization.  Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod: (pod=2, data=16, model=16) = 512 chips; the 'pod' axis carries
+hierarchical data parallelism (gradient all-reduce staged within-pod first,
+then across the slow inter-pod links).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small explicit mesh for CPU integration tests."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             axis_types=(AxisType.Auto,) * 3)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

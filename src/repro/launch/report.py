@@ -1,0 +1,111 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.launch.report > /root/repo/results/roofline_tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import registry
+from repro.configs.base import SHAPES
+
+DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "results", "dryrun")
+
+
+def fmt_bytes(b):
+    for u in ("B", "KB", "MB", "GB", "TB", "PB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{u}"
+        b /= 1024
+    return f"{b:.1f}EB"
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.0f}us"
+    if x < 1:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def load_all():
+    recs = {}
+    for f in glob.glob(os.path.join(DIR, "*.json")):
+        r = json.load(open(f))
+        parts = os.path.basename(f)[:-5].split("__")
+        if len(parts) != 3:
+            continue                       # tagged hillclimb variants
+        arch, shape, mesh = parts
+        recs[(arch, shape, mesh)] = r
+    return recs
+
+
+def roofline_table(recs, mesh="single"):
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "bytes/chip | MODEL/HLO flops | MFU@roof |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in registry.ARCH_IDS:
+        for shape in SHAPES:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                lines.append(f"| {arch} | {shape} | — | — | — | MISSING | | | |")
+                continue
+            if "skipped" in r:
+                lines.append(f"| {arch} | {shape} | — | — | — | "
+                             f"skip: {r['skipped'][:40]} | | | |")
+                continue
+            rf = r["roofline"]
+            m = r["memory"]
+            per_chip = (m["argument_bytes"] + m["temp_bytes"]
+                        + m["output_bytes"] - m["alias_bytes"])
+            lines.append(
+                f"| {arch} | {shape} | {fmt_s(rf['compute_s'])} | "
+                f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+                f"**{rf['dominant']}** | {fmt_bytes(per_chip)} | "
+                f"{rf['model_over_hlo_flops']:.2f} | "
+                f"{rf['mfu_at_roofline'] * 100:.1f}% |")
+    return "\n".join(lines)
+
+
+def dryrun_summary(recs):
+    n_ok = sum(1 for r in recs.values() if "roofline" in r)
+    n_skip = sum(1 for r in recs.values() if "skipped" in r)
+    lines = [f"cells compiled: {n_ok}; skipped (documented): {n_skip}", ""]
+    lines.append("| arch | shape | mesh | lower | compile | args/chip | "
+                 "temp/chip | collective ops |")
+    lines.append("|---|---|---|---|---|---|---|---|")
+    for arch in registry.ARCH_IDS:
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                r = recs.get((arch, shape, mesh))
+                if r is None or "roofline" not in r:
+                    continue
+                m = r["memory"]
+                lines.append(
+                    f"| {arch} | {shape} | {r['mesh']} | {r['lower_s']}s | "
+                    f"{r['compile_s']}s | "
+                    f"{fmt_bytes(m['argument_bytes'])} | "
+                    f"{fmt_bytes(m['temp_bytes'])} | "
+                    f"{r['collectives']['num_ops']} |")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load_all()
+    print("## §Dry-run\n")
+    print(dryrun_summary(recs))
+    print("\n## §Roofline — single-pod 16x16 (256 chips), per-chip terms\n")
+    print(roofline_table(recs, "single"))
+    print("\n## §Roofline — multi-pod 2x16x16 (512 chips)\n")
+    print(roofline_table(recs, "multi"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,228 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute     = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory      = HLO_bytes / (chips * HBM_bw)
+    collective  = per-chip collective traffic / link_bw
+                  (== global traffic / (chips * link_bw))
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-program,
+all chips).  Collective traffic is parsed from the post-SPMD compiled HLO
+text: for each all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute op we take the result shape bytes (per participant) and
+apply the standard ring-traffic factor:
+
+    all-reduce(S)        2 * S * (n-1)/n        (reduce-scatter + all-gather)
+    all-gather(S_out)    S_out * (n-1)/n
+    reduce-scatter(S_o)  S_o * (n-1)            (streams (n-1)/n of its input)
+    all-to-all(S)        S * (n-1)/n
+    collective-permute   S
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?(\w+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_TUPLE_COLL_RE = re.compile(
+    r"=\s+\((.*?)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    if "collective-permute" in line:
+        return 2
+    return default
+
+
+def _traffic(kind: str, size: int, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * size * (n - 1) / n
+    if kind == "all-gather":
+        return size * (n - 1) / n
+    if kind == "reduce-scatter":
+        return float(size) * (n - 1)
+    if kind == "all-to-all":
+        return size * (n - 1) / n
+    return float(size)        # collective-permute
+
+
+def collective_bytes(hlo_text: str, default_group: int) -> dict:
+    """Per-participant collective traffic summed over the program."""
+    per_kind: dict[str, float] = {}
+    count = 0
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        kind = None
+        size = 0
+        if m:
+            kind = m.group(3)
+            size = _shape_bytes(m.group(1), m.group(2))
+        else:
+            mt = _TUPLE_COLL_RE.search(line)
+            if mt:
+                kind = mt.group(2)
+                size = sum(_shape_bytes(d, s)
+                           for d, s in _SHAPE_RE.findall(mt.group(1)))
+        if kind is None:
+            continue
+        n = _group_size(line, default_group)
+        per_kind[kind] = per_kind.get(kind, 0.0) + _traffic(kind, size, n)
+        count += 1
+    return {"per_kind": per_kind, "total": sum(per_kind.values()),
+            "num_ops": count}
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All inputs are PER-CHIP (post-SPMD compiled HLO is one device's
+    program); model_flops is global and normalized by chips."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float              # per chip
+    bytes_hbm: float          # per chip
+    bytes_coll: float         # per chip
+    model_flops: float        # global
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def mfu(self) -> float:
+        """model-FLOPs utilization at the roofline-predicted step time."""
+        t = self.step_time_s
+        return (self.model_flops / (self.chips * PEAK_FLOPS)) / t if t else 0.0
+
+    @property
+    def flops_ratio(self) -> float:
+        """useful (model) FLOPs / compiled FLOPs — remat/redundancy waste."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def to_dict(self):
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "hlo_flops_per_chip": self.flops,
+            "hlo_bytes_per_chip": self.bytes_hbm,
+            "coll_bytes_per_chip": self.bytes_coll,
+            "model_flops": self.model_flops,
+            "model_over_hlo_flops": self.flops_ratio,
+            "mfu_at_roofline": self.mfu, "chips": self.chips,
+        }
+
+
+def roofline_from(cost: dict, coll: dict, chips: int,
+                  model_flops: float) -> Roofline:
+    """cost/coll values are per-chip quantities from the partitioned HLO."""
+    flops = float(cost.get("flops", 0.0))
+    bts = float(cost.get("bytes accessed", 0.0))
+    coll_b = float(coll["total"])
+    return Roofline(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bts / HBM_BW,
+        collective_s=coll_b / LINK_BW,
+        flops=flops, bytes_hbm=bts, bytes_coll=coll_b,
+        model_flops=model_flops, chips=chips)
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference)
+# ---------------------------------------------------------------------------
+
+def active_param_count(cfg) -> float:
+    """Matmul parameters touched per token (MoE: top-k + shared only)."""
+    d = cfg.d_model
+
+    def layer_params(kind: str) -> float:
+        if kind == "ssd":
+            di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+            return d * (2 * di + 2 * g * n + h) + di * d
+        if kind == "rec":
+            dr = cfg.lru_width
+            return 2 * d * dr + 2 * dr * dr + dr * d + 3 * d * cfg.d_ff
+        if kind in ("mla", "mla_moe"):
+            a = (d * cfg.q_lora_rank
+                 + cfg.q_lora_rank * cfg.num_heads * (cfg.qk_nope_dim + cfg.qk_rope_dim)
+                 + d * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+                 + cfg.kv_lora_rank * cfg.num_heads * (cfg.qk_nope_dim + cfg.v_head_dim)
+                 + cfg.num_heads * cfg.v_head_dim * d)
+        else:
+            hd = cfg.head_dim
+            a = d * cfg.num_heads * hd + 2 * d * cfg.num_kv_heads * hd \
+                + cfg.num_heads * hd * d
+            if kind == "dec":
+                a *= 2  # + cross attention
+        if kind in ("moe", "mla_moe"):
+            f = (cfg.top_k * 3 * d * cfg.d_expert
+                 + cfg.n_shared * 3 * d * cfg.d_expert + d * cfg.n_experts)
+        else:
+            f = 3 * d * cfg.d_ff
+        return a + f
+
+    total = 0.0
+    for kinds, reps in cfg.stages:
+        total += reps * sum(layer_params(k) for k in kinds)
+    for kinds, reps in getattr(cfg, "encoder_stages", ()):
+        total += reps * sum(layer_params(k) for k in kinds)
+    total += d * cfg.vocab_size          # lm head (tied or not, compute is real)
+    return total
+
+
+def model_flops_for(cfg, shape, chips_tokens: Optional[int] = None) -> float:
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

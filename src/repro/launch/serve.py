@@ -1,0 +1,69 @@
+"""LM serving driver: batched greedy decode with a persistent KV/state cache.
+
+Runs a reduced config end-to-end on CPU (the production mesh path is
+exercised by the dry-run):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.models import transformer as tfm
+
+
+def serve(arch: str, *, batch=4, prompt_len=8, gen_tokens=16, reduced=True):
+    cfg = registry.get_reduced(arch) if reduced else registry.get_config(arch)
+    key = jax.random.PRNGKey(0)
+    params, _ = tfm.init(key, cfg)
+    max_len = prompt_len + gen_tokens
+    cache, _ = tfm.init_cache(cfg, batch, max_len)
+    memory = None
+    if cfg.is_encoder_decoder:
+        memory = jax.random.normal(key, (batch, 16, cfg.d_model),
+                                   jnp.bfloat16)
+
+    @jax.jit
+    def step(params, cache, tok, idx):
+        logits, cache = tfm.decode_step(params, cache, tok, idx, cfg,
+                                        memory=memory)
+        return jnp.argmax(logits[:, -1:], -1).astype(jnp.int32), cache
+
+    prompt = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
+    # prefill token-by-token (simple driver; prefill_32k shape covers bulk)
+    tok = prompt[:, :1]
+    t0 = time.perf_counter()
+    out_tokens = []
+    for i in range(max_len - 1):
+        nxt, cache = step(params, cache,
+                          prompt[:, i:i + 1] if i < prompt_len else tok, i)
+        tok = nxt
+        if i >= prompt_len - 1:
+            out_tokens.append(np.asarray(tok)[:, 0])
+    dt = time.perf_counter() - t0
+    gen = np.stack(out_tokens, 1)
+    return gen, dt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b",
+                    choices=registry.ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+    gen, dt = serve(args.arch, batch=args.batch, gen_tokens=args.tokens)
+    n = gen.size
+    print(f"arch={args.arch} generated {gen.shape} tokens in {dt:.2f}s "
+          f"({n / dt:.1f} tok/s); sample: {gen[0][:8]}")
+    assert np.isfinite(gen).all()
+
+
+if __name__ == "__main__":
+    main()

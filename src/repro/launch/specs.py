@@ -1,0 +1,68 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's inputs.
+
+Weak-type-correct, shardable, zero allocation.  Training/prefill shapes get a
+token (or stub-embedding) batch; decode shapes get (token, cache) where the
+cache ShapeDtypeStructs come from ``jax.eval_shape`` over ``init_cache``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tfm
+
+# decode/prefill shapes for enc-dec archs: stub source memory length
+SRC_FRAMES = 3072
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Training/prefill batch ShapeDtypeStructs + logical shardings."""
+    b, s = shape.global_batch, shape.seq_len
+    sds, shard = {}, {}
+    if cfg.frontend != "none" and not cfg.is_encoder_decoder:
+        sds["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        shard["embeds"] = P("batch", None, None)
+    sds["inputs"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    shard["inputs"] = P("batch", None)
+    if shape.kind == "train":
+        sds["targets"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        shard["targets"] = P("batch", None)
+    if cfg.is_encoder_decoder:
+        sds["src_embeds"] = jax.ShapeDtypeStruct((b, SRC_FRAMES, cfg.d_model),
+                                                 jnp.bfloat16)
+        shard["src_embeds"] = P("batch", None, None)
+    return sds, shard
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Decode cache ShapeDtypeStructs + logical shardings."""
+    b, s = shape.global_batch, shape.seq_len
+    cache_sds = jax.eval_shape(lambda: tfm.init_cache(cfg, b, s)[0])
+    return cache_sds, tfm.cache_specs_only(cfg)
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(tokens, tok_shard, memory, mem_shard) for serve_step."""
+    b = shape.global_batch
+    tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tok_shard = P("batch", None)
+    mem, mem_shard = None, None
+    if cfg.is_encoder_decoder:
+        mem = jax.ShapeDtypeStruct((b, SRC_FRAMES, cfg.d_model), jnp.bfloat16)
+        mem_shard = P("batch", None, None)
+    return tok, tok_shard, mem, mem_shard
+
+
+def param_specs(cfg: ModelConfig):
+    """(param ShapeDtypeStructs, logical shardings) with zero allocation."""
+    cell = {}
+
+    def f(key):
+        p, s = tfm.init(key, cfg)
+        cell["s"] = s
+        return p
+
+    sds = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return sds, cell["s"]

@@ -1,0 +1,242 @@
+"""Step builders: jit-able train / prefill / serve steps with full sharding.
+
+``make_dist`` chooses the parallelism rules per (mesh, shape):
+  - batch over ('pod','data') (multi-pod) or ('data',) — replicated if B==1
+  - TP on 'model' (heads / ffn / vocab / experts)
+  - long-context decode shards the KV cache sequence dim over 'data'
+  - optional SP (sequence-parallel residual stream) via rules['seq']='model'
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tfm
+from repro.sharding import DEFAULT_RULES, DistContext
+from repro.train import optim as opt_lib
+from repro.launch import specs as specs_lib
+
+
+def make_dist(mesh, cfg: ModelConfig, shape: ShapeConfig, *,
+              seq_parallel: bool = False,
+              parallelism: str = "auto") -> DistContext:
+    """``parallelism``: 'auto' (TP on model axis per DEFAULT_RULES) or
+    'dp_only' (§Perf lever: batch over ALL mesh axes, no tensor parallelism
+    — right for small dense models where TP collectives dominate)."""
+    rules = dict(DEFAULT_RULES)
+    axes = mesh.axis_names
+    if parallelism == "dp_only":
+        batch_axes = tuple(a for a in ("pod", "data", "model") if a in axes)
+        dp = 1
+        for a in batch_axes:
+            dp *= mesh.shape[a]
+        if shape.global_batch % max(dp, 1) != 0 or shape.global_batch < dp:
+            # pure DP needs batch >= mesh size (e.g. 256-seq batch on 512
+            # chips would replicate compute 2x) — fall back to TP rules
+            return make_dist(mesh, cfg, shape, seq_parallel=seq_parallel,
+                             parallelism="auto")
+        rules["heads"] = None
+        rules["ffn"] = None
+        rules["vocab"] = None      # 'model' now carries batch; replicate head
+        rules["kv_heads"] = None
+        rules["batch"] = batch_axes
+        return DistContext(mesh=mesh, rules=rules)
+    batch_axes = tuple(a for a in ("pod", "data") if a in axes)
+    dp = 1
+    for a in batch_axes:
+        dp *= mesh.shape[a]
+    if shape.global_batch % max(dp, 1) != 0 or shape.global_batch < dp:
+        # un-shardable batch (e.g. long_500k B=1): replicate batch,
+        # shard the long KV-cache sequence dim over 'data' instead.
+        rules["batch"] = None
+        rules["kv_seq"] = "data"
+    else:
+        rules["batch"] = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    if shape.kind == "decode" and shape.seq_len >= 2 ** 18:
+        rules["kv_seq"] = "data"
+    if shape.kind == "decode" and (cfg.num_kv_heads % mesh.shape["model"]
+                                   or cfg.use_mla):
+        # GQA caches with few KV heads can't split on TP, and the MLA
+        # compressed cache has no heads dim at all; shard the cache
+        # *sequence* over 'model' instead (context-parallel decode) — the
+        # cache must not be replicated (e.g. qwen2-7b decode_32k is 240 GB,
+        # deepseek MLA decode_32k is 18 GB/chip batch-sharded only).
+        rules["kv_heads"] = None
+        if rules["kv_seq"] is None:
+            rules["kv_seq"] = "model"
+    if seq_parallel:
+        rules["seq"] = "model"
+    if cfg.family == "ssm":
+        # mamba2-130m: 24 SSD heads / fused 3352-wide in-proj don't split 16
+        # ways, and a 130M model has no business doing TP — pure DP, with the
+        # embedding still sharded on 'model' (padded vocab divides evenly).
+        rules["heads"] = None
+        rules["ffn"] = None
+    # Weight-state sharding for the huge MoEs (params exceed TP-sharded HBM:
+    # 671B bf16 / 16 = 84 GB/chip).  Experts store sharded over data*model
+    # (ZeRO-3-style); SPMD all-gathers each layer's experts over 'data' at
+    # use — the standard weight-gathering tradeoff, overlappable.
+    if cfg.n_experts and cfg.n_experts % (dp_total(mesh) * mesh.shape["model"]) == 0:
+        rules["expert"] = tuple(a for a in ("data", "model")
+                                if a in mesh.axis_names)
+    elif cfg.n_experts and cfg.d_expert % 128 == 0 and \
+            (cfg.n_experts * cfg.d_expert * cfg.d_model * 3
+             * cfg.num_layers * 2) > 64e9:      # total expert bytes (bf16)
+        rules["expert_ffn"] = "data"     # dbrx: shard expert hidden over data
+    return DistContext(mesh=mesh, rules=rules)
+
+
+def dp_total(mesh) -> int:
+    n = 1
+    for a in ("data",):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def opt_config_for(cfg: ModelConfig) -> opt_lib.OptConfig:
+    # Adam state for the huge MoE configs exceeds single-pod HBM -> Adafactor
+    if cfg.name in ("deepseek-v3-671b", "dbrx-132b"):
+        return opt_lib.OptConfig(name="adafactor", lr=1e-4)
+    return opt_lib.OptConfig(name="adamw", lr=3e-4)
+
+
+def default_grad_accum(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    if shape.kind != "train":
+        return 1
+    if cfg.d_model >= 6000:
+        return 8
+    if cfg.d_model >= 4000:
+        return 8       # glm4-9b: accum 4 leaves 19.4 GB/chip, 8 fits v5e
+    if cfg.d_model >= 3000:
+        return 4
+    return 2
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, dist: DistContext,
+                    opt_cfg: opt_lib.OptConfig, grad_accum: int = 1,
+                    kv_chunk: int = 1024, accum_dtype=jnp.float32,
+                    grad_shardings=None, remat: bool = True):
+    """``grad_shardings``: optional pytree of NamedShardings for the grad
+    accumulator (ZeRO-2: shard accumulated grads over 'data' — XLA then
+    reduce-scatters each microbatch instead of all-reducing + keeping a
+    replicated f32 copy, cutting accumulator HBM by the DP degree)."""
+    opt_init, opt_update = opt_lib.OPTIMIZERS[opt_cfg.name]
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        def loss_of(p, mb):
+            return tfm.loss_fn(p, mb, cfg, dist, kv_chunk=kv_chunk,
+                               remat=remat)
+
+        if grad_accum > 1:
+            def resplit(x):
+                y = x.reshape((grad_accum, x.shape[0] // grad_accum)
+                              + x.shape[1:])
+                if dist is not None:
+                    # keep the batch sharding on the *microbatch* dim — else
+                    # SPMD re-gathers every scan step (observed as XLA's
+                    # "involuntary full rematerialization" warning)
+                    y = dist.constrain(
+                        y, P(None, dist.rules["batch"],
+                             *([None] * (x.ndim - 1))))
+                return y
+
+            mbs = jax.tree.map(resplit, batch)
+
+            def constrain_g(g):
+                if grad_shardings is None:
+                    return g
+                return jax.tree.map(
+                    lambda a, s: jax.lax.with_sharding_constraint(a, s),
+                    g, grad_shardings)
+
+            def micro(carry, mb):
+                loss, g = jax.value_and_grad(loss_of)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), carry[1], g)
+                return (carry[0] + loss, constrain_g(gsum)), None
+
+            zero_g = constrain_g(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params))
+            (loss_sum, gsum), _ = jax.lax.scan(
+                micro, (jnp.zeros((), jnp.float32), zero_g), mbs)
+            loss = loss_sum / grad_accum
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.float32) / grad_accum, gsum)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+
+        new_params, new_opt, gnorm = opt_update(grads, state["opt"], params,
+                                                opt_cfg)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": loss, "gnorm": gnorm}
+
+    return train_step
+
+
+def train_state_specs(cfg: ModelConfig, dist: DistContext,
+                      opt_cfg: opt_lib.OptConfig):
+    """(state ShapeDtypeStructs, state NamedShardings, grad accumulator
+    NamedShardings) — no allocation.  Grad shardings are the resolved param
+    specs extended ZeRO-2-style over the data axis."""
+    opt_init, _ = opt_lib.OPTIMIZERS[opt_cfg.name]
+    p_sds, p_logical = specs_lib.param_specs(cfg)
+    cell = {}
+
+    def mk_opt(p):
+        st, st_specs = opt_init(p, p_logical, dist, opt_cfg)
+        cell["specs"] = st_specs
+        return st
+
+    o_sds = jax.eval_shape(mk_opt, p_sds)
+    state_sds = {"params": p_sds, "opt": o_sds,
+                 "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    logical = {"params": p_logical, "opt": cell["specs"], "step": P()}
+    shardings = jax.tree.map(
+        lambda sp: dist.sharding(sp), logical,
+        is_leaf=lambda x: isinstance(x, P))
+    from jax.sharding import NamedSharding
+    grad_shardings = jax.tree.map(
+        lambda sp, sds: NamedSharding(
+            dist.mesh,
+            opt_lib._zero1_spec(dist.resolve(sp), sds.shape, "data")),
+        p_logical, p_sds, is_leaf=lambda x: isinstance(x, P))
+    return state_sds, shardings, grad_shardings
+
+
+# ---------------------------------------------------------------------------
+# prefill / serve steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, dist: DistContext,
+                      kv_chunk: int = 1024):
+    def prefill_step(params, batch):
+        logits = tfm.forward(params, batch, cfg, dist, kv_chunk=kv_chunk,
+                             remat=False)
+        # realistic prefill output: next-token logits for the last position
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, dist: DistContext):
+    def serve_step(params, cache, tokens, idx, memory=None):
+        logits, new_cache = tfm.decode_step(params, cache, tokens, idx, cfg,
+                                            dist, memory=memory)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], new_cache
+
+    return serve_step

@@ -1,0 +1,127 @@
+"""End-to-end training driver: data pipeline -> sharded train step ->
+checkpoint/restart -> straggler monitor.  Runs real steps on small meshes
+(CPU integration) and is the template the dry-run lowers for the production
+mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --reduced --steps 20 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.base import ShapeConfig
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as tfm
+from repro.runtime.fault import (FailureInjector, Heartbeat, NodeFailure,
+                                 StragglerMonitor, run_with_restarts)
+from repro.train import optim as opt_lib
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import TokenPipeline
+
+
+def build_state(cfg, key):
+    params, specs = tfm.init(key, cfg)
+    opt_cfg = steps_lib.opt_config_for(cfg)
+    opt_init, _ = opt_lib.OPTIMIZERS[opt_cfg.name]
+    opt_state, _ = opt_init(params, None, None, opt_cfg)
+    return {"params": params, "opt": opt_state,
+            "step": jnp.zeros((), jnp.int32)}, specs, opt_cfg
+
+
+def train(arch: str, *, reduced=True, steps=20, batch=8, seq=64,
+          ckpt_dir=None, ckpt_every=10, fail_at=(), data=1, model=1,
+          log_every=5):
+    cfg = registry.get_reduced(arch) if reduced else registry.get_config(arch)
+    shape = ShapeConfig("custom", "train", seq, batch)
+    dist = None
+    mesh_ctx = None
+    if data * model > 1:
+        mesh = make_host_mesh(data=data, model=model)
+        dist = steps_lib.make_dist(mesh, cfg, shape)
+        mesh_ctx = mesh
+
+    state, specs, opt_cfg = build_state(cfg, jax.random.PRNGKey(0))
+    step_fn = jax.jit(steps_lib.make_train_step(cfg, dist, opt_cfg,
+                                                kv_chunk=max(seq // 4, 16)))
+    pipe = TokenPipeline(cfg, batch, seq,
+                         src_len=64 if cfg.is_encoder_decoder else 0)
+    ckpt = CheckpointManager(ckpt_dir, keep=2) if ckpt_dir else None
+    injector = FailureInjector(tuple(fail_at))
+    monitor = StragglerMonitor()
+    hb = Heartbeat(timeout=3600)
+    losses = []
+
+    def loop(start_step: int) -> int:
+        nonlocal state
+        if start_step == -1:           # restart: restore latest checkpoint
+            assert ckpt is not None, "failure without checkpointing"
+            step0 = ckpt.latest_step() or 0
+            state = ckpt.restore(state, step=step0)
+            print(f"[restart] restored step {step0}")
+        else:
+            step0 = start_step
+        s = int(np.asarray(jax.device_get(state["step"])))
+        while s < steps:
+            batch_np = pipe.batch_at(s)
+            t0 = time.monotonic()
+            injector.check(s)
+            state, metrics = step_fn(state, batch_np)
+            loss = float(np.asarray(jax.device_get(metrics["loss"])))
+            dt = time.monotonic() - t0
+            monitor.record(s, dt)
+            hb.beat()
+            losses.append(loss)
+            if s % log_every == 0:
+                print(f"step {s:5d} loss {loss:.4f} "
+                      f"gnorm {float(np.asarray(metrics['gnorm'])):.3f} "
+                      f"dt {dt * 1e3:.0f}ms")
+            s += 1
+            if ckpt and s % ckpt_every == 0:
+                ckpt.save(s, state)
+        if ckpt:
+            ckpt.save(steps, state, block=True)
+            ckpt.wait()
+        return s
+
+    if mesh_ctx is not None:
+        with mesh_ctx:
+            final = run_with_restarts(loop, on_restart=lambda n, e: print(
+                f"[fault] restart {n}: {e}"))
+    else:
+        final = run_with_restarts(loop, on_restart=lambda n, e: print(
+            f"[fault] restart {n}: {e}"))
+    return losses, final
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b",
+                    choices=registry.ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[])
+    args = ap.parse_args()
+    losses, final = train(args.arch, reduced=args.reduced, steps=args.steps,
+                          batch=args.batch, seq=args.seq,
+                          ckpt_dir=args.ckpt_dir, fail_at=args.fail_at,
+                          data=args.data, model=args.model)
+    print(f"done at step {final}; loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,309 @@
+"""Attention family: MHA/GQA (+sliding window, qk-norm, bias), cross-attn,
+and DeepSeek MLA (compressed-KV) — all with a KV-chunked flash path so the
+full-scale configs lower without materializing (S x S) logits.
+
+Layout: activations (B, S, D); q/k/v (B, S, H, Dh).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import common as cm
+from repro.layers import rope as rp
+
+NEG_INF = -2.0 ** 30
+
+
+# ---------------------------------------------------------------------------
+# flash-style attention core (KV-chunk scan, online softmax)
+# ---------------------------------------------------------------------------
+
+def _chunk_attend(q, k, v, qpos, kpos, causal, window, scale):
+    """One KV chunk. q:(B,Sq,H,D) k/v:(B,Sk,Kh,D) -> partial (acc, m, l).
+
+    bf16 operands with f32 MXU accumulation (flash-standard): halves the
+    score/PV dot traffic vs upcasting inputs (§Perf P1 iteration 3)."""
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qr = q.reshape(b, sq, kh, g, d)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qr, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window and window > 0:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                   # (b,kh,g,q)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return acc, m, l
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    kv_chunk=1024, scale=None):
+    """Online-softmax attention, scanning KV in chunks.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, Kh, D).  ``q_offset`` is the absolute
+    position of q[0] (for decode/cross-chunk causality).
+    Memory: O(Sq * kv_chunk) per step instead of O(Sq * Sk).
+    """
+    b, sq, h, d = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    qpos = q_offset + jnp.arange(sq)
+    nchunk = -(-sk // kv_chunk)
+    if nchunk <= 1:
+        acc, m, l = _chunk_attend(q, k, v, qpos, jnp.arange(sk), causal,
+                                  window, scale)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+
+    pad = nchunk * kv_chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunk, kv_chunk, kh, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunk, kv_chunk, kh, d).transpose(1, 0, 2, 3, 4)
+
+    g = h // kh
+    init = (jnp.zeros((b, kh, g, sq, d), jnp.float32),
+            jnp.full((b, kh, g, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, kh, g, sq), jnp.float32))
+
+    @jax.checkpoint
+    def body(carry, inp):
+        ci, kci, vci = inp
+        acc, m, l = carry
+        kpos = ci * kv_chunk + jnp.arange(kv_chunk)
+        kpos_valid = kpos < sk
+        a2, m2, l2 = _chunk_attend(q, kci, vci, qpos,
+                                   jnp.where(kpos_valid, kpos, 2 ** 30),
+                                   causal, window, scale)
+        m_new = jnp.maximum(m, m2)
+        r1 = jnp.exp(m - m_new)
+        r2 = jnp.exp(m2 - m_new)
+        acc = acc * r1[..., None] + a2 * r2[..., None]
+        l = l * r1 + l2 * r2
+        return (acc, m_new, l), None
+
+    (acc, m, l), _ = jax.lax.scan(body, init,
+                                  (jnp.arange(nchunk), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg, dtype=jnp.bfloat16):
+    d, h, kh, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["q"], s["q"] = cm.dense_init(ks[0], d, h * dh, None, "heads", dtype,
+                                   bias=cfg.qkv_bias)
+    p["k"], s["k"] = cm.dense_init(ks[1], d, kh * dh, None, "heads", dtype,
+                                   bias=cfg.qkv_bias)
+    p["v"], s["v"] = cm.dense_init(ks[2], d, kh * dh, None, "heads", dtype,
+                                   bias=cfg.qkv_bias)
+    p["o"], s["o"] = cm.dense_init(ks[3], h * dh, d, "heads", None, dtype)
+    if getattr(cfg, "qk_norm", False):
+        p["qn"], s["qn"] = cm.rmsnorm_init(dh)
+        p["kn"], s["kn"] = cm.rmsnorm_init(dh)
+    return p, s
+
+
+def gqa_apply(p, x, cfg, *, positions, layer_kind="global", kv_chunk=1024,
+              causal=True):
+    """Training / prefill self-attention. x: (B, S, D)."""
+    b, sq, d = x.shape
+    h, kh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = cm.dense_apply(p["q"], x).reshape(b, sq, h, dh)
+    k = cm.dense_apply(p["k"], x).reshape(b, sq, kh, dh)
+    v = cm.dense_apply(p["v"], x).reshape(b, sq, kh, dh)
+    if "qn" in p:
+        q = cm.rmsnorm_apply(p["qn"], q, cfg.norm_eps)
+        k = cm.rmsnorm_apply(p["kn"], k, cfg.norm_eps)
+    theta = cfg.rope_theta_local if (layer_kind == "local" and
+                                     getattr(cfg, "rope_theta_local", 0)) \
+        else cfg.rope_theta
+    if getattr(cfg, "mrope_sections", None):
+        q = rp.apply_mrope(q, positions, cfg.mrope_sections, theta)
+        k = rp.apply_mrope(k, positions, cfg.mrope_sections, theta)
+    else:
+        pos2d = positions if positions.ndim == 2 else positions[0]
+        q = rp.apply_rope(q, pos2d, theta)
+        k = rp.apply_rope(k, pos2d, theta)
+    window = cfg.window if layer_kind == "local" else 0
+    o = flash_attention(q, k, v, causal=causal, window=window,
+                        kv_chunk=kv_chunk)
+    return cm.dense_apply(p["o"], o.reshape(b, sq, h * dh))
+
+
+def gqa_decode(p, x, cache, cache_index, cfg, *, layer_kind="global"):
+    """Single-token decode. cache: {"k","v"}: (B, Smax, Kh, Dh)."""
+    b, sq, d = x.shape
+    h, kh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = cm.dense_apply(p["q"], x).reshape(b, sq, h, dh)
+    k = cm.dense_apply(p["k"], x).reshape(b, sq, kh, dh)
+    v = cm.dense_apply(p["v"], x).reshape(b, sq, kh, dh)
+    if "qn" in p:
+        q = cm.rmsnorm_apply(p["qn"], q, cfg.norm_eps)
+        k = cm.rmsnorm_apply(p["kn"], k, cfg.norm_eps)
+    pos = jnp.full((b, sq), cache_index, jnp.int32)
+    theta = cfg.rope_theta_local if (layer_kind == "local" and
+                                     getattr(cfg, "rope_theta_local", 0)) \
+        else cfg.rope_theta
+    if getattr(cfg, "mrope_sections", None):
+        q = rp.apply_mrope(q, jnp.broadcast_to(pos, (3, b, sq)),
+                           cfg.mrope_sections, theta)
+        k = rp.apply_mrope(k, jnp.broadcast_to(pos, (3, b, sq)),
+                           cfg.mrope_sections, theta)
+    else:
+        q = rp.apply_rope(q, pos, theta)
+        k = rp.apply_rope(k, pos, theta)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, cache_index, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, cache_index, 0, 0))
+    smax = ck.shape[1]
+    kpos = jnp.arange(smax)
+    window = cfg.window if layer_kind == "local" else 0
+    g = h // kh
+    qr = q.reshape(b, sq, kh, g, dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qr.astype(jnp.float32),
+                   ck.astype(jnp.float32)) * (dh ** -0.5)
+    mask = kpos <= cache_index
+    if window:
+        mask &= kpos > cache_index - window
+    s = jnp.where(mask[None, None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, cv.astype(jnp.float32))
+    o = o.reshape(b, sq, h * dh).astype(x.dtype)
+    return cm.dense_apply(p["o"], o), {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# cross attention (enc-dec)
+# ---------------------------------------------------------------------------
+
+def cross_init(key, cfg, dtype=jnp.bfloat16):
+    d, h, kh, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["q"], s["q"] = cm.dense_init(ks[0], d, h * dh, None, "heads", dtype)
+    p["k"], s["k"] = cm.dense_init(ks[1], d, kh * dh, None, "heads", dtype)
+    p["v"], s["v"] = cm.dense_init(ks[2], d, kh * dh, None, "heads", dtype)
+    p["o"], s["o"] = cm.dense_init(ks[3], h * dh, d, "heads", None, dtype)
+    return p, s
+
+
+def cross_apply(p, x, memory, cfg, kv_chunk=1024):
+    """x: (B, Sq, D) decoder states; memory: (B, Sk, D) encoder output."""
+    b, sq, _ = x.shape
+    sk = memory.shape[1]
+    h, kh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = cm.dense_apply(p["q"], x).reshape(b, sq, h, dh)
+    k = cm.dense_apply(p["k"], memory).reshape(b, sk, kh, dh)
+    v = cm.dense_apply(p["v"], memory).reshape(b, sk, kh, dh)
+    o = flash_attention(q, k, v, causal=False, kv_chunk=kv_chunk)
+    return cm.dense_apply(p["o"], o.reshape(b, sq, h * dh))
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek MLA (multi-head latent attention, compressed KV cache)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    h = cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    p, s = {}, {}
+    p["dq"], s["dq"] = cm.dense_init(ks[0], d, qr, None, None, dtype)
+    p["dq_n"], s["dq_n"] = cm.rmsnorm_init(qr)
+    p["uq"], s["uq"] = cm.dense_init(ks[1], qr, h * (dn + dr), None, "heads", dtype)
+    p["dkv"], s["dkv"] = cm.dense_init(ks[2], d, kvr + dr, None, None, dtype)
+    p["dkv_n"], s["dkv_n"] = cm.rmsnorm_init(kvr)
+    p["uk"], s["uk"] = cm.dense_init(ks[3], kvr, h * dn, None, "heads", dtype)
+    p["uv"], s["uv"] = cm.dense_init(ks[4], kvr, h * dv, None, "heads", dtype)
+    p["o"], s["o"] = cm.dense_init(ks[5], h * dv, d, "heads", None, dtype)
+    return p, s
+
+
+def mla_apply(p, x, cfg, *, positions, kv_chunk=1024):
+    """Training / prefill MLA (decompressed form)."""
+    b, sq, d = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    cq = cm.rmsnorm_apply(p["dq_n"], cm.dense_apply(p["dq"], x), cfg.norm_eps)
+    q = cm.dense_apply(p["uq"], cq).reshape(b, sq, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    ckv_full = cm.dense_apply(p["dkv"], x)
+    ckv = cm.rmsnorm_apply(p["dkv_n"], ckv_full[..., :cfg.kv_lora_rank],
+                           cfg.norm_eps)
+    k_rope = ckv_full[..., cfg.kv_lora_rank:].reshape(b, sq, 1, dr)
+    pos2d = positions if positions.ndim == 2 else positions[0]
+    q_rope = rp.apply_rope(q_rope, pos2d, cfg.rope_theta)
+    k_rope = rp.apply_rope(k_rope, pos2d, cfg.rope_theta)
+    k_nope = cm.dense_apply(p["uk"], ckv).reshape(b, sq, h, dn)
+    v = cm.dense_apply(p["uv"], ckv).reshape(b, sq, h, dv)
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+    k_full = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (b, sq, h, dr))], -1)
+    scale = (dn + dr) ** -0.5
+    # pad v to qk dim for the shared flash core, then slice back
+    if dv < dn + dr:
+        v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+    else:
+        v_p = v
+    o = flash_attention(q_full, k_full, v_p, causal=True, kv_chunk=kv_chunk,
+                        scale=scale)[..., :dv]
+    return cm.dense_apply(p["o"], o.reshape(b, sq, h * dv))
+
+
+def mla_decode(p, x, cache, cache_index, cfg):
+    """Absorbed-form MLA decode: attention runs in the compressed space;
+    the cache holds (c_kv, k_rope) only — the MLA memory win."""
+    b, sq, d = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    cq = cm.rmsnorm_apply(p["dq_n"], cm.dense_apply(p["dq"], x), cfg.norm_eps)
+    q = cm.dense_apply(p["uq"], cq).reshape(b, sq, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    pos = jnp.full((b, sq), cache_index, jnp.int32)
+    q_rope = rp.apply_rope(q_rope, pos, cfg.rope_theta)
+    ckv_full = cm.dense_apply(p["dkv"], x)
+    ckv = cm.rmsnorm_apply(p["dkv_n"], ckv_full[..., :kvr], cfg.norm_eps)
+    k_rope = rp.apply_rope(ckv_full[..., kvr:].reshape(b, sq, 1, dr), pos,
+                           cfg.rope_theta)
+    cc = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_index, 0))
+    cr = jax.lax.dynamic_update_slice(
+        cache["kr"], k_rope[:, :, 0].astype(cache["kr"].dtype),
+        (0, cache_index, 0))
+    # absorb W_uk into q: q_c (B,1,H,kvr) = q_nope @ W_uk(per head)^T
+    wuk = p["uk"]["w"].reshape(kvr, h, dn)
+    q_c = jnp.einsum("bqhd,khd->bqhk", q_nope.astype(jnp.float32),
+                     wuk.astype(jnp.float32))
+    s = (jnp.einsum("bqhk,bsk->bhqs", q_c, cc.astype(jnp.float32)) +
+         jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                    cr.astype(jnp.float32))) * ((dn + dr) ** -0.5)
+    kpos = jnp.arange(cc.shape[1])
+    s = jnp.where((kpos <= cache_index)[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhqs,bsk->bqhk", w, cc.astype(jnp.float32))
+    wuv = p["uv"]["w"].reshape(kvr, h, dv)
+    o = jnp.einsum("bqhk,khd->bqhd", o_c, wuv.astype(jnp.float32))
+    o = o.reshape(b, sq, h * dv).astype(x.dtype)
+    return cm.dense_apply(p["o"], o), {"ckv": cc, "kr": cr}

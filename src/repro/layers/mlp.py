@@ -1,0 +1,35 @@
+"""Dense FFNs: gated (SwiGLU/GeGLU) and plain, TP-sharded on the hidden dim."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import common as cm
+
+
+def glu_init(key, d_model, d_ff, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["wi"], s["wi"] = cm.dense_init(ks[0], d_model, d_ff, None, "ffn", dtype)
+    p["wg"], s["wg"] = cm.dense_init(ks[1], d_model, d_ff, None, "ffn", dtype)
+    p["wo"], s["wo"] = cm.dense_init(ks[2], d_ff, d_model, "ffn", None, dtype)
+    return p, s
+
+
+def glu_apply(p, x, act="silu"):
+    a = cm.ACTS[act](cm.dense_apply(p["wg"], x).astype(jnp.float32))
+    h = a * cm.dense_apply(p["wi"], x).astype(jnp.float32)
+    return cm.dense_apply(p["wo"], h.astype(x.dtype))
+
+
+def mlp_init(key, d_model, d_ff, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 2)
+    p, s = {}, {}
+    p["wi"], s["wi"] = cm.dense_init(ks[0], d_model, d_ff, None, "ffn", dtype)
+    p["wo"], s["wo"] = cm.dense_init(ks[1], d_ff, d_model, "ffn", None, dtype)
+    return p, s
+
+
+def mlp_apply(p, x, act="gelu"):
+    h = cm.ACTS[act](cm.dense_apply(p["wi"], x).astype(jnp.float32))
+    return cm.dense_apply(p["wo"], h.astype(x.dtype))

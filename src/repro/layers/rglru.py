@@ -1,0 +1,82 @@
+"""Griffin / RecurrentGemma RG-LRU recurrent block (arXiv:2402.19427).
+
+Block: in-proj to two branches -> (conv1d -> RG-LRU) * gelu(gate) -> out-proj.
+The temporal conv1d runs through the HUGE2 untangled depthwise path.
+Prefill uses an associative scan over the diagonal linear recurrence;
+decode is the O(1) update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import common as cm
+from repro.core.untangle import untangled_depthwise_conv1d
+
+_C = 8.0  # RG-LRU exponent constant
+
+
+def rglru_init(key, cfg, dtype=jnp.bfloat16):
+    d, dr = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_x": jax.random.normal(ks[0], (d, dr), dtype) * d ** -0.5,
+        "in_g": jax.random.normal(ks[1], (d, dr), dtype) * d ** -0.5,
+        "conv": jax.random.normal(ks[2], (cfg.conv_width, dr), dtype) * 0.2,
+        "wa": jax.random.normal(ks[3], (dr, dr), dtype) * dr ** -0.5,
+        "wx": jax.random.normal(ks[4], (dr, dr), dtype) * dr ** -0.5,
+        "lam": jnp.full((dr,), 2.0, jnp.float32),   # sigmoid(lam)^c ~ decay
+        "out": jax.random.normal(ks[5], (dr, d), dtype) * dr ** -0.5,
+    }
+    s = {
+        "in_x": cm.spec(None, "heads"), "in_g": cm.spec(None, "heads"),
+        "conv": cm.spec(None, "heads"),
+        "wa": cm.spec(None, "heads"), "wx": cm.spec(None, "heads"),
+        "lam": cm.spec("heads"), "out": cm.spec("heads", None),
+    }
+    return p, s
+
+
+def _rglru_gates(p, x):
+    """x: (..., dr) post-conv branch -> (a, gated_x) in f32."""
+    rg = jax.nn.sigmoid(cm.dense_apply({"w": p["wa"]}, x).astype(jnp.float32))
+    ig = jax.nn.sigmoid(cm.dense_apply({"w": p["wx"]}, x).astype(jnp.float32))
+    log_a = -_C * rg * jax.nn.softplus(p["lam"])        # log a_t  (<=0)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bx = mult * ig * x.astype(jnp.float32)
+    return a, bx
+
+
+def rglru_apply(p, xin, cfg, h0=None):
+    """Prefill/train. xin: (B, S, D) -> (B, S, D)."""
+    b, s, d = xin.shape
+    x = cm.dense_apply({"w": p["in_x"]}, xin)
+    g = cm.dense_apply({"w": p["in_g"]}, xin)
+    x = untangled_depthwise_conv1d(x, p["conv"], causal=True)
+    a, bx = _rglru_gates(p, x)
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def comb(l, r):
+        return (l[0] * r[0], l[1] * r[0] + r[1])
+
+    _, h = jax.lax.associative_scan(comb, (a, bx), axis=1)
+    y = h * jax.nn.gelu(g.astype(jnp.float32), approximate=True)
+    return cm.dense_apply({"w": p["out"]}, y.astype(xin.dtype))
+
+
+def rglru_decode(p, xin, state, cfg):
+    """O(1) decode. state: {"h": (B, dr) f32, "conv": (B, K-1, dr)}."""
+    b, s, d = xin.shape
+    assert s == 1
+    x = cm.dense_apply({"w": p["in_x"]}, xin)
+    g = cm.dense_apply({"w": p["in_g"]}, xin)
+    window = jnp.concatenate([state["conv"], x], 1)
+    xc = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                    p["conv"].astype(jnp.float32))[:, None].astype(xin.dtype)
+    a, bx = _rglru_gates(p, xc)
+    hnew = a[:, 0] * state["h"] + bx[:, 0]
+    y = hnew[:, None] * jax.nn.gelu(g.astype(jnp.float32), approximate=True)
+    out = cm.dense_apply({"w": p["out"]}, y.astype(xin.dtype))
+    return out, {"h": hnew, "conv": window[:, 1:]}

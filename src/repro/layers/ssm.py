@@ -1,0 +1,185 @@
+"""Mamba-2 SSD mixer (state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk attention-like
+matmuls + a scan over chunk boundary states.  Decode is the O(1) recurrent
+state update.  The short causal depthwise conv in front of (x, B, C) runs
+through the paper-engine's *untangled depthwise* formulation (HUGE2 §3.2.3,
+C=1 outer-product case).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import common as cm
+from repro.core.untangle import untangled_depthwise_conv1d
+
+
+def ssd_init(key, cfg, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    di = cfg.d_inner                      # e.g. 2*d
+    h = cfg.ssm_heads                     # di / headdim
+    n = cfg.ssm_state
+    g = cfg.ssm_groups
+    ks = jax.random.split(key, 6)
+    conv_dim = di + 2 * g * n
+    p = {
+        # fused in-proj: [z (di), x (di), B (g*n), C (g*n), dt (h)]
+        "in": jax.random.normal(ks[0], (d, 2 * di + 2 * g * n + h), dtype)
+              * d ** -0.5,
+        "conv": jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), dtype)
+                * 0.2,
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((di,), jnp.float32),
+        "out": jax.random.normal(ks[2], (di, d), dtype) * di ** -0.5,
+    }
+    s = {
+        "in": cm.spec(None, "heads"),
+        "conv": cm.spec(None, "heads"),
+        "A_log": cm.spec(None), "D": cm.spec(None), "dt_bias": cm.spec(None),
+        "norm": cm.spec("heads"),
+        "out": cm.spec("heads", None),
+    }
+    return p, s
+
+
+def _split_in(y, cfg):
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = y[..., :di]
+    x = y[..., di:2 * di]
+    bmat = y[..., 2 * di:2 * di + g * n]
+    cmat = y[..., 2 * di + g * n:2 * di + 2 * g * n]
+    dt = y[..., 2 * di + 2 * g * n:]
+    return z, x, bmat, cmat, dt
+
+
+def ssd_chunked(x, dt, a_log, b, c, d_skip, chunk: int = 128):
+    """Chunked SSD. x:(B,S,H,P) dt:(B,S,H) b,c:(B,S,G,N) -> (B,S,H,P).
+
+    Within-chunk: Y += (C B^T * decay-masked) dtX.  Across chunks: state
+    h:(B,H,P,N) carried by lax.scan with per-chunk decay.
+    """
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    nchunk = -(-s // chunk)
+    pad = nchunk * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = nchunk * chunk
+    a = -jnp.exp(a_log)                                     # (H,) negative
+    xf = x.astype(jnp.float32).reshape(bsz, nchunk, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nchunk, chunk, h)
+    bf = b.astype(jnp.float32).reshape(bsz, nchunk, chunk, g, n)
+    cf = c.astype(jnp.float32).reshape(bsz, nchunk, chunk, g, n)
+    # heads per group
+    hg = h // g
+    bf = jnp.repeat(bf, hg, axis=3)                         # (B,Nc,Q,H,N)
+    cf = jnp.repeat(cf, hg, axis=3)
+
+    da = dtf * a                                            # (B,Nc,Q,H)
+    cum = jnp.cumsum(da, axis=2)                            # within-chunk
+    # decay from position j to i (i>=j): exp(cum[i] - cum[j]).  Mask the
+    # *exponent* (not the product) so masked entries are exactly 0 and the
+    # VJP never sees exp(+large)*0 = NaN.
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,Nc,Qi,Qj,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    seg = jnp.where(tri[None, None, :, :, None], seg, -1e30)
+    l_mask = jnp.exp(seg)
+    # NOTE (§Perf P3): every multi-operand einsum here is pre-merged into a
+    # single pairwise contraction — XLA otherwise materializes per-position
+    # rank-1 outer products f32[B,Nc,H,Q,N*P] (measured 6 x 25.8 GB/chip).
+    xdt = xf * dtf[..., None]                               # (B,Nc,Q,H,P)
+    # intra-chunk: scores (B,Nc,H,Qi,Qj)
+    scores = jnp.einsum("bnqhN,bnkhN->bnhqk", cf, bf)
+    scores = scores * l_mask.transpose(0, 1, 4, 2, 3)
+    y_intra = jnp.einsum("bnhqk,bnkhp->bnqhp", scores, xdt)
+
+    # chunk-boundary states
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)         # (B,Nc,Q,H)
+    state_c = jnp.einsum("bnkhN,bnkhp->bnhNp",
+                         bf, xdt * decay_to_end[..., None])  # per-chunk inject
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                 # (B,Nc,H)
+
+    def scanner(hprev, inp):
+        inj, dec = inp                                      # (B,H,N,P),(B,H)
+        hnew = hprev * dec[:, :, None, None] + inj
+        return hnew, hprev
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, h_in = jax.lax.scan(
+        scanner, h0,
+        (state_c.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                    # (B,Nc,H,N,P)
+    decay_from_start = jnp.exp(cum)                         # (B,Nc,Q,H)
+    y_inter = jnp.einsum("bnqhN,bnhNp->bnqhp",
+                         cf * decay_from_start[..., None], h_in)
+    y = (y_intra + y_inter).reshape(bsz, sp, h, p)[:, :s]
+    y = y + d_skip[None, None, :, None] * x.astype(jnp.float32)[
+        :, :sp].reshape(bsz, sp, h, p)[:, :s]
+    return y
+
+
+def ssd_apply(p, xin, cfg, conv_state=None):
+    """Full mixer: in-proj -> conv -> SSD -> gated norm -> out-proj."""
+    bsz, s, _ = xin.shape
+    di, h, n, g = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    ph = di // h
+    y = cm.dense_apply({"w": p["in"]}, xin)
+    z, x, bmat, cmat, dt = _split_in(y, cfg)
+    xbc = jnp.concatenate([x, bmat, cmat], -1)
+    xbc = untangled_depthwise_conv1d(xbc, p["conv"], causal=True)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(xin.dtype)
+    x = xbc[..., :di].reshape(bsz, s, h, ph)
+    bmat = xbc[..., di:di + g * n].reshape(bsz, s, g, n)
+    cmat = xbc[..., di + g * n:].reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    yss = ssd_chunked(x, dt, p["A_log"], bmat, cmat, p["D"],
+                      chunk=cfg.ssm_chunk)
+    yss = yss.reshape(bsz, s, di)
+    # gated RMSNorm (mamba2)
+    zf = jax.nn.silu(z.astype(jnp.float32))
+    yn = yss * zf
+    var = jnp.mean(yn * yn, -1, keepdims=True)
+    yn = yn * jax.lax.rsqrt(var + 1e-6) * p["norm"]
+    return cm.dense_apply({"w": p["out"]}, yn.astype(xin.dtype))
+
+
+def ssd_decode(p, xin, state, cfg):
+    """O(1) decode. state: {"h": (B,H,N,P) f32, "conv": (B,K-1,conv_dim)}."""
+    bsz, s, _ = xin.shape
+    assert s == 1
+    di, h, n, g = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    ph = di // h
+    y = cm.dense_apply({"w": p["in"]}, xin)
+    z, x, bmat, cmat, dt = _split_in(y, cfg)
+    xbc = jnp.concatenate([x, bmat, cmat], -1)               # (B,1,convdim)
+    window = jnp.concatenate([state["conv"], xbc], 1)        # (B,K,convdim)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv"].astype(jnp.float32))[:, None]
+    xbc = jax.nn.silu(conv_out).astype(xin.dtype)
+    new_conv = window[:, 1:]
+    x = xbc[..., :di].reshape(bsz, h, ph)
+    bmat = xbc[..., di:di + g * n].reshape(bsz, g, n)
+    cmat = xbc[..., di + g * n:].reshape(bsz, g, n)
+    hg = h // g
+    bmat = jnp.repeat(bmat, hg, axis=1)                      # (B,H,N)
+    cmat = jnp.repeat(cmat, hg, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    a = -jnp.exp(p["A_log"])
+    dec = jnp.exp(dt * a)                                    # (B,H)
+    inj = jnp.einsum("bh,bhN,bhp->bhNp", dt, bmat, x.astype(jnp.float32))
+    hnew = state["h"] * dec[:, :, None, None] + inj
+    yss = jnp.einsum("bhN,bhNp->bhp", cmat, hnew)
+    yss = yss + p["D"][None, :, None] * x.astype(jnp.float32)
+    yss = yss.reshape(bsz, 1, di)
+    zf = jax.nn.silu(z.astype(jnp.float32))
+    yn = yss * zf
+    var = jnp.mean(yn * yn, -1, keepdims=True)
+    yn = yn * jax.lax.rsqrt(var + 1e-6) * p["norm"]
+    out = cm.dense_apply({"w": p["out"]}, yn.astype(xin.dtype))
+    return out, {"h": hnew, "conv": new_conv}

@@ -1,0 +1,128 @@
+"""DCGAN / cGAN (paper Table 1) built on the HUGE2 engine ops.
+
+Generators stack the exact Table-1 transposed-conv layers; discriminators
+mirror them with strided convs.  All convolutions run through
+``huge_conv_transpose2d`` / ``huge_conv2d`` whose custom VJPs implement the
+paper's §3.2.3 training formulation, so both inference *and* training
+exercise the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import huge_conv2d, huge_conv_transpose2d
+from repro.layers import common as cm
+
+
+@dataclasses.dataclass(frozen=True)
+class DeconvLayer:
+    in_hw: int
+    in_c: int
+    out_c: int
+    kernel: int
+    stride: int
+
+
+# paper Table 1
+DCGAN_LAYERS = (
+    DeconvLayer(4, 1024, 512, 5, 2),
+    DeconvLayer(8, 512, 256, 5, 2),
+    DeconvLayer(16, 256, 128, 5, 2),
+    DeconvLayer(32, 128, 3, 5, 2),
+)
+CGAN_LAYERS = (
+    DeconvLayer(8, 256, 128, 4, 2),
+    DeconvLayer(16, 128, 3, 4, 2),
+)
+
+
+def deconv_padding(kernel: int, stride: int):
+    """'SAME'-style transposed padding: out = stride * in.
+
+    out = (h-1)*s + pl + ph - k + 2 == s*h  =>  pl + ph = k + s - 2.
+    """
+    total = kernel + stride - 2
+    pl = max(0, (kernel - stride + 1) // 2)
+    ph = total - pl
+    return ((pl, ph), (pl, ph))
+
+
+@dataclasses.dataclass(frozen=True)
+class GANConfig:
+    name: str
+    layers: tuple[DeconvLayer, ...]
+    z_dim: int = 100
+    backend: str = "xla"            # 'xla' | 'pallas'
+
+
+DCGAN = GANConfig("dcgan", DCGAN_LAYERS)
+CGAN = GANConfig("cgan", CGAN_LAYERS, z_dim=110)   # z + 10-class condition
+
+
+def generator_init(key, cfg: GANConfig, dtype=jnp.float32):
+    l0 = cfg.layers[0]
+    ks = jax.random.split(key, len(cfg.layers) + 1)
+    p = {"proj": jax.random.normal(
+        ks[0], (cfg.z_dim, l0.in_hw * l0.in_hw * l0.in_c), dtype) * 0.02}
+    s = {"proj": cm.spec(None, "model")}
+    for i, l in enumerate(cfg.layers):
+        p[f"dc{i}"] = jax.random.normal(
+            ks[i + 1], (l.kernel, l.kernel, l.in_c, l.out_c), dtype) * 0.02
+        p[f"b{i}"] = jnp.zeros((l.out_c,), dtype)
+        s[f"dc{i}"] = cm.spec(None, None, None, "model")
+        s[f"b{i}"] = cm.spec("model")
+    return p, s
+
+
+def generator_apply(p, z, cfg: GANConfig):
+    l0 = cfg.layers[0]
+    x = (z @ p["proj"]).reshape(z.shape[0], l0.in_hw, l0.in_hw, l0.in_c)
+    x = jax.nn.relu(x)
+    for i, l in enumerate(cfg.layers):
+        pad = deconv_padding(l.kernel, l.stride)
+        x = huge_conv_transpose2d(x, p[f"dc{i}"], (l.stride, l.stride), pad,
+                                  cfg.backend)
+        x = x + p[f"b{i}"]
+        x = jnp.tanh(x) if i == len(cfg.layers) - 1 else jax.nn.relu(x)
+    return x
+
+
+def discriminator_init(key, cfg: GANConfig, dtype=jnp.float32):
+    layers = tuple(reversed(cfg.layers))
+    ks = jax.random.split(key, len(layers) + 1)
+    p, s = {}, {}
+    for i, l in enumerate(layers):
+        # mirror: out_c -> in_c, stride-2 downsample
+        p[f"c{i}"] = jax.random.normal(
+            ks[i], (l.kernel, l.kernel, l.out_c, l.in_c), dtype) * 0.02
+        s[f"c{i}"] = cm.spec(None, None, None, "model")
+    l_last = layers[-1]
+    fdim = l_last.in_hw ** 2 * l_last.in_c
+    p["head"] = jax.random.normal(ks[-1], (fdim, 1), dtype) * 0.02
+    s["head"] = cm.spec("model", None)
+    return p, s
+
+
+def discriminator_apply(p, x, cfg: GANConfig):
+    layers = tuple(reversed(cfg.layers))
+    for i, l in enumerate(layers):
+        pad = ((l.kernel // 2, (l.kernel - 1) // 2),
+               (l.kernel // 2, (l.kernel - 1) // 2))
+        x = huge_conv2d(x, p[f"c{i}"], (l.stride, l.stride), pad, cfg.backend)
+        x = jax.nn.leaky_relu(x, 0.2)
+    return x.reshape(x.shape[0], -1) @ p["head"]
+
+
+def gan_losses(gp, dp, z, real, cfg: GANConfig):
+    """Non-saturating GAN loss pair."""
+    fake = generator_apply(gp, z, cfg)
+    d_fake = discriminator_apply(dp, fake, cfg)
+    d_real = discriminator_apply(dp, real, cfg)
+    d_loss = (jax.nn.softplus(-d_real) + jax.nn.softplus(d_fake)).mean()
+    g_loss = jax.nn.softplus(-d_fake).mean()
+    return g_loss, d_loss

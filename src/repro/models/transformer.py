@@ -1,0 +1,412 @@
+"""Composable decoder (and encoder-decoder) assembly over stage-scanned blocks.
+
+Layer kinds: attn|local|global|moe|mla|mla_moe|ssd|rec|enc|dec — see
+configs.base.  Parameters of a stage are stacked (leading repeat dim) and the
+stage executes as ``lax.scan`` with per-block remat.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.layers import attention as attn
+from repro.layers import common as cm
+from repro.layers import mlp as mlp_lib
+from repro.layers import moe as moe_lib
+from repro.layers import rglru as rglru_lib
+from repro.layers import ssm as ssm_lib
+from repro.sharding import stack_specs
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+
+def _norm_init(cfg):
+    return cm.rmsnorm_init(cfg.d_model)
+
+
+def init_layer(key, kind: str, cfg):
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = _norm_init(cfg)
+    if kind in ("attn", "local", "global", "moe", "enc", "dec"):
+        p["attn"], s["attn"] = attn.gqa_init(ks[0], cfg)
+    elif kind in ("mla", "mla_moe"):
+        p["attn"], s["attn"] = attn.mla_init(ks[0], cfg)
+    elif kind == "ssd":
+        p["ssd"], s["ssd"] = ssm_lib.ssd_init(ks[0], cfg)
+        if cfg.sandwich_norm:
+            p["pn1"], s["pn1"] = _norm_init(cfg)
+        return p, s                                    # mixer-only block
+    elif kind == "rec":
+        p["rec"], s["rec"] = rglru_lib.rglru_init(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if kind == "dec":
+        p["lnx"], s["lnx"] = _norm_init(cfg)
+        p["cross"], s["cross"] = attn.cross_init(ks[1], cfg)
+    p["ln2"], s["ln2"] = _norm_init(cfg)
+    if kind in ("moe", "mla_moe"):
+        p["moe"], s["moe"] = moe_lib.moe_init(ks[2], cfg)
+        if cfg.n_shared:
+            p["shared"], s["shared"] = mlp_lib.glu_init(
+                ks[3], cfg.d_model, cfg.d_expert * cfg.n_shared)
+    else:
+        p["mlp"], s["mlp"] = mlp_lib.glu_init(ks[2], cfg.d_model, cfg.d_ff)
+    if cfg.sandwich_norm:
+        p["pn1"], s["pn1"] = _norm_init(cfg)
+        p["pn2"], s["pn2"] = _norm_init(cfg)
+    return p, s
+
+
+def init_block(key, kinds, cfg):
+    p, s = {}, {}
+    for i, kind in enumerate(kinds):
+        key, sub = jax.random.split(key)
+        p[f"l{i}"], s[f"l{i}"] = init_layer(sub, kind, cfg)
+    return p, s
+
+
+# ---------------------------------------------------------------------------
+# per-layer apply (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _rms(p, x, cfg):
+    return cm.rmsnorm_apply(p, x, cfg.norm_eps, gemma_style=cfg.gemma_norm)
+
+
+def apply_layer(p, x, kind, cfg, dist, *, positions, memory=None,
+                kv_chunk=1024):
+    if kind == "ssd":
+        h = ssm_lib.ssd_apply(p["ssd"], _rms(p["ln1"], x, cfg), cfg)
+        if cfg.sandwich_norm:
+            h = _rms(p["pn1"], h, cfg)
+        return x + h
+    # mixer sublayer
+    h = _rms(p["ln1"], x, cfg)
+    if kind in ("mla", "mla_moe"):
+        h = attn.mla_apply(p["attn"], h, cfg, positions=positions,
+                           kv_chunk=kv_chunk)
+    elif kind == "rec":
+        h = rglru_lib.rglru_apply(p["rec"], h, cfg)
+    elif kind == "enc":
+        h = attn.gqa_apply(p["attn"], h, cfg, positions=positions,
+                           layer_kind="global", kv_chunk=kv_chunk,
+                           causal=False)
+    else:
+        lk = "local" if kind == "local" else "global"
+        h = attn.gqa_apply(p["attn"], h, cfg, positions=positions,
+                           layer_kind=lk, kv_chunk=kv_chunk)
+    if cfg.sandwich_norm:
+        h = _rms(p["pn1"], h, cfg)
+    x = x + h
+    if kind == "dec":
+        h = attn.cross_apply(p["cross"], _rms(p["lnx"], x, cfg), memory, cfg,
+                             kv_chunk=kv_chunk)
+        x = x + h
+    # ffn sublayer
+    h = _rms(p["ln2"], x, cfg)
+    if kind in ("moe", "mla_moe"):
+        y = moe_lib.moe_apply(p["moe"], h, cfg, dist)
+        if cfg.n_shared:
+            y = y + mlp_lib.glu_apply(p["shared"], h, cfg.act)
+        h = y
+    else:
+        h = mlp_lib.glu_apply(p["mlp"], h, cfg.act)
+    if cfg.sandwich_norm:
+        h = _rms(p["pn2"], h, cfg)
+    return x + h
+
+
+def _enc_causal_fix(kind):
+    return kind  # placeholder for readability
+
+
+def apply_block(bp, x, kinds, cfg, dist, *, positions, memory=None,
+                kv_chunk=1024):
+    for i, kind in enumerate(kinds):
+        x = apply_layer(bp[f"l{i}"], x, kind, cfg, dist, positions=positions,
+                        memory=memory, kv_chunk=kv_chunk)
+        if dist is not None:
+            x = dist.constrain(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+
+def block_specs(kinds, cfg):
+    """Specs for one block, computed abstractly (no arrays allocated)."""
+    cell = {}
+
+    def f(k):
+        p, s = init_block(k, kinds, cfg)
+        cell["s"] = s
+        return p
+
+    jax.eval_shape(f, jax.random.PRNGKey(0))
+    return cell["s"]
+
+
+def init(key, cfg, dtype=jnp.bfloat16):
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {}
+    specs: dict[str, Any] = {}
+    params["embed"], specs["embed"] = cm.embed_init(keys[0], cfg.padded_vocab,
+                                                    cfg.d_model, dtype)
+    stages_p, stages_s = [], []
+    for si, (kinds, reps) in enumerate(cfg.stages):
+        skey = jax.random.fold_in(keys[1], si)
+        bp = jax.vmap(lambda k: init_block(k, kinds, cfg)[0])(
+            jax.random.split(skey, reps))
+        stages_p.append(bp)
+        stages_s.append(stack_specs(block_specs(kinds, cfg)))
+    params["stages"], specs["stages"] = stages_p, stages_s
+    if cfg.is_encoder_decoder:
+        enc_p, enc_s = [], []
+        for si, (kinds, reps) in enumerate(cfg.encoder_stages):
+            skey = jax.random.fold_in(keys[2], si)
+            bp = jax.vmap(lambda k: init_block(k, kinds, cfg)[0])(
+                jax.random.split(skey, reps))
+            enc_p.append(bp)
+            enc_s.append(stack_specs(block_specs(kinds, cfg)))
+        params["enc_stages"], specs["enc_stages"] = enc_p, enc_s
+        params["enc_norm"], specs["enc_norm"] = _norm_init(cfg)
+    params["final_norm"], specs["final_norm"] = _norm_init(cfg)
+    if not cfg.tie_embeddings:
+        params["head"], specs["head"] = cm.dense_init(
+            keys[3], cfg.d_model, cfg.padded_vocab, None, "vocab", dtype)
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _embed_in(params, batch, cfg, dist):
+    if cfg.frontend != "none" and "embeds" in batch:
+        x = batch["embeds"]
+    else:
+        x = cm.embed_apply(params["embed"], batch["inputs"])
+    if cfg.gemma_norm:
+        x = (x.astype(jnp.float32) * (cfg.d_model ** 0.5)).astype(x.dtype)
+    if dist is not None:
+        x = dist.constrain(x)
+    return x
+
+
+def _positions_for(cfg, b, s):
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.mrope_sections:
+        return jnp.broadcast_to(pos[None], (3, b, s))
+    return pos
+
+
+def _run_stages(params_stages, stage_defs, x, cfg, dist, *, positions,
+                memory=None, kv_chunk=1024, remat=True):
+    for sp, (kinds, reps) in zip(params_stages, stage_defs):
+        def body(carry, bp, kinds=kinds):
+            y = apply_block(bp, carry, kinds, cfg, dist, positions=positions,
+                            memory=memory, kv_chunk=kv_chunk)
+            return y, None
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, sp)
+    return x
+
+
+def encode(params, src_embeds, cfg, dist, kv_chunk=1024):
+    x = src_embeds
+    if cfg.gemma_norm:
+        x = (x.astype(jnp.float32) * (cfg.d_model ** 0.5)).astype(x.dtype)
+    pos = _positions_for(cfg, x.shape[0], x.shape[1])
+    x = _run_stages(params["enc_stages"], cfg.encoder_stages, x, cfg, dist,
+                    positions=pos, kv_chunk=kv_chunk)
+    return cm.rmsnorm_apply(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward(params, batch, cfg, dist=None, *, kv_chunk=1024, remat=True):
+    """Teacher-forced logits: (B, S, V) float32."""
+    x = _embed_in(params, batch, cfg, dist)
+    b, s = x.shape[0], x.shape[1]
+    positions = _positions_for(cfg, b, s)
+    memory = None
+    if cfg.is_encoder_decoder:
+        memory = encode(params, batch["src_embeds"], cfg, dist, kv_chunk)
+    x = _run_stages(params["stages"], cfg.stages, x, cfg, dist,
+                    positions=positions, memory=memory, kv_chunk=kv_chunk,
+                    remat=remat)
+    x = cm.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps,
+                         gemma_style=cfg.gemma_norm)
+    logits = _readout(params, x, cfg)
+    if dist is not None:
+        logits = dist.constrain(logits, P(dist.rules["batch"], None, "vocab"))
+    return logits
+
+
+def _readout(params, x, cfg):
+    """LM head over the padded vocab; padding columns masked to -inf."""
+    if cfg.tie_embeddings:
+        logits = cm.embed_logits(params["embed"], x)
+    else:
+        logits = cm.dense_apply(params["head"], x).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(col < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+def loss_fn(params, batch, cfg, dist=None, *, kv_chunk=1024, remat=True):
+    logits = forward(params, batch, cfg, dist, kv_chunk=kv_chunk, remat=remat)
+    tgt = batch["targets"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    mask = (tgt >= 0).astype(jnp.float32)
+    loss = ((lse - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def init_cache_layer(kind, cfg, batch, max_len, dtype=jnp.bfloat16):
+    kh, dh = cfg.num_kv_heads, cfg.head_dim
+    if kind in ("attn", "local", "global", "moe", "dec"):
+        c = {"k": jnp.zeros((batch, max_len, kh, dh), dtype),
+             "v": jnp.zeros((batch, max_len, kh, dh), dtype)}
+        s = {"k": cm.spec("batch", "kv_seq", "kv_heads", None),
+             "v": cm.spec("batch", "kv_seq", "kv_heads", None)}
+        return c, s
+    if kind in ("mla", "mla_moe"):
+        c = {"ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+             "kr": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype)}
+        s = {"ckv": cm.spec("batch", "kv_seq", None),
+             "kr": cm.spec("batch", "kv_seq", None)}
+        return c, s
+    if kind == "ssd":
+        di, h, n = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state
+        conv_dim = di + 2 * cfg.ssm_groups * n
+        c = {"h": jnp.zeros((batch, h, n, di // h), jnp.float32),
+             "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype)}
+        s = {"h": cm.spec("batch", "heads", None, None),
+             "conv": cm.spec("batch", None, "heads")}
+        return c, s
+    if kind == "rec":
+        c = {"h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+             "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width),
+                               dtype)}
+        s = {"h": cm.spec("batch", "heads"),
+             "conv": cm.spec("batch", None, "heads")}
+        return c, s
+    raise ValueError(kind)
+
+
+def init_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    stages_c, stages_s = [], []
+    for kinds, reps in cfg.stages:
+        bc, bs = {}, {}
+        for i, kind in enumerate(kinds):
+            c, s = init_cache_layer(kind, cfg, batch, max_len, dtype)
+            bc[f"l{i}"], bs[f"l{i}"] = c, s
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (reps,) + a.shape), bc)
+        stages_c.append(stacked)
+        stages_s.append(stack_specs(bs))
+    return stages_c, stages_s
+
+
+def cache_specs_only(cfg):
+    """Logical sharding specs for the decode cache (no arrays built)."""
+    stages_s = []
+    for kinds, reps in cfg.stages:
+        bs = {}
+        for i, kind in enumerate(kinds):
+            cell = {}
+
+            def f(kind=kind, cell=cell):
+                c, s = init_cache_layer(kind, cfg, 1, 1)
+                cell["s"] = s
+                return c
+
+            jax.eval_shape(f)
+            bs[f"l{i}"] = cell["s"]
+        stages_s.append(stack_specs(bs))
+    return stages_s
+
+
+def decode_layer(p, x, kind, cfg, cache, idx, memory=None, dist=None):
+    if kind == "ssd":
+        h, nc = ssm_lib.ssd_decode(p["ssd"], _rms(p["ln1"], x, cfg), cache, cfg)
+        if cfg.sandwich_norm:
+            h = _rms(p["pn1"], h, cfg)
+        return x + h, nc
+    h = _rms(p["ln1"], x, cfg)
+    if kind in ("mla", "mla_moe"):
+        h, nc = attn.mla_decode(p["attn"], h, cache, idx, cfg)
+    elif kind == "rec":
+        h, nc = rglru_lib.rglru_decode(p["rec"], h, cache, cfg)
+    else:
+        lk = "local" if kind == "local" else "global"
+        h, nc = attn.gqa_decode(p["attn"], h, cache, idx, cfg, layer_kind=lk)
+    if cfg.sandwich_norm:
+        h = _rms(p["pn1"], h, cfg)
+    x = x + h
+    if kind == "dec":
+        h = attn.cross_apply(p["cross"], _rms(p["lnx"], x, cfg), memory, cfg)
+        x = x + h
+    h = _rms(p["ln2"], x, cfg)
+    if kind in ("moe", "mla_moe"):
+        y = moe_lib.moe_apply(p["moe"], h, cfg, dist)
+        if cfg.n_shared:
+            y = y + mlp_lib.glu_apply(p["shared"], h, cfg.act)
+        h = y
+    else:
+        h = mlp_lib.glu_apply(p["mlp"], h, cfg.act)
+    if cfg.sandwich_norm:
+        h = _rms(p["pn2"], h, cfg)
+    return x + h, nc
+
+
+def decode_step(params, cache_stages, tokens, idx, cfg, dist=None,
+                memory=None):
+    """One decode step. tokens: (B, 1) int32 (or embeds for stub frontends).
+
+    Returns (logits (B, 1, V), new_cache_stages).
+    """
+    if cfg.frontend != "none" and tokens.ndim == 3:
+        x = tokens
+    else:
+        x = cm.embed_apply(params["embed"], tokens)
+    if cfg.gemma_norm:
+        x = (x.astype(jnp.float32) * (cfg.d_model ** 0.5)).astype(x.dtype)
+    if dist is not None:
+        x = dist.constrain(x)
+    new_stages = []
+    for sp, sc, (kinds, reps) in zip(params["stages"], cache_stages,
+                                     cfg.stages):
+        def body(carry, xs, kinds=kinds):
+            bp, bc = xs
+            y = carry
+            ncs = {}
+            for i, kind in enumerate(kinds):
+                y, nc = decode_layer(bp[f"l{i}"], y, kind, cfg, bc[f"l{i}"],
+                                     idx, memory=memory, dist=dist)
+                ncs[f"l{i}"] = nc
+            return y, ncs
+        x, new_cache = jax.lax.scan(body, x, (sp, sc))
+        new_stages.append(new_cache)
+    x = cm.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps,
+                         gemma_style=cfg.gemma_norm)
+    return _readout(params, x, cfg), new_stages

@@ -1,0 +1,87 @@
+"""Sharding rules: logical param axes -> mesh axes, activation constraints.
+
+The model code annotates parameters with *logical* axis names ("heads",
+"ffn", "vocab", "expert", ...).  ``DistContext`` owns the mapping from
+logical axes to physical mesh axes — changing a parallelism strategy (the
+§Perf hillclimb lever) means editing RULES, not models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# default logical->mesh translation (megatron TP on 'model', experts EP'd)
+DEFAULT_RULES: dict[str, Any] = {
+    "heads": "model",
+    "kv_heads": "model",         # cleared when num_kv_heads % TP != 0
+    "ffn": "model",
+    "vocab": "model",
+    "expert": "model",
+    "expert_ffn": None,
+    "batch": ("data",),          # overridden to ('pod','data') multi-pod
+    "seq": None,                 # set to 'model' to turn on SP residuals
+    "kv_seq": None,              # decode cache sequence dim (long-context)
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    mesh: Mesh
+    rules: dict = dataclasses.field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    @property
+    def batch_axes(self):
+        return self.rules["batch"]
+
+    @property
+    def model_axis(self):
+        return "model"
+
+    def resolve(self, spec: P) -> P:
+        """Translate a logical PartitionSpec into a mesh PartitionSpec."""
+        out = []
+        for ax in spec:
+            if ax is None:
+                out.append(None)
+            elif isinstance(ax, str) and ax in self.rules:
+                out.append(self.rules[ax])
+            else:
+                out.append(ax)
+        return P(*out)
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, self.resolve(spec))
+
+    def param_shardings(self, specs_tree):
+        return jax.tree.map(
+            lambda sp: self.sharding(sp), specs_tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    # ---- activation constraints -------------------------------------------
+    def act_spec(self, *, seq_dim: bool = True) -> P:
+        """(B, S, D) residual-stream spec: batch over DP axes, optional SP."""
+        if seq_dim:
+            return P(self.rules["batch"], self.rules["seq"], None)
+        return P(self.rules["batch"], None)
+
+    def constrain(self, x, spec: Optional[P] = None):
+        if self.mesh is None:
+            return x
+        spec = spec if spec is not None else self.act_spec()
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.resolve(spec)))
+
+
+def single_device_dist() -> Optional[DistContext]:
+    """None-context for smoke tests (no mesh, constraints are no-ops)."""
+    return None
+
+
+def stack_specs(specs_tree, n_lead: int = 1):
+    """Prepend ``n_lead`` None axes to every PartitionSpec (stacked stages)."""
+    return jax.tree.map(
+        lambda sp: P(*((None,) * n_lead + tuple(sp))), specs_tree,
+        is_leaf=lambda x: isinstance(x, P))

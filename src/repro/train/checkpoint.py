@@ -1,0 +1,131 @@
+"""Fault-tolerant checkpointing: atomic directory swap, async save thread,
+``latest``-pointer resume, keep-k GC.  The on-disk layout is mesh-independent
+(flat {path: np.ndarray} npz + a JSON manifest), so a checkpoint written on a
+512-chip mesh restores onto any other mesh (elastic restart) — resharding is
+just ``jax.device_put(value, new_sharding)`` at load.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":     # npz can't store ml_dtypes;
+            arr = arr.astype(np.float32)     # bf16 -> f32 is lossless and
+        flat[key] = arr                      # restore() casts back
+    return flat
+
+
+class CheckpointManager:
+    """Directory layout::
+
+        dir/step_000100/arrays.npz        (atomic: written to .tmp, renamed)
+        dir/step_000100/manifest.json     {"step": 100, "meta": {...}}
+        dir/latest                        -> "step_000100"
+    """
+
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, state: Any, meta: Optional[dict] = None,
+             block: bool = False):
+        # snapshot on the caller's thread (device_get), serialize off-thread.
+        # Always join the previous writer first: two writers on one step's
+        # tmp dir (async periodic + final sync save) would race.
+        self.wait()
+        flat = _flatten(jax.device_get(state))
+        if self.async_save and not block:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat, meta or {}), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, flat, meta or {})
+
+    def _write(self, step: int, flat: dict, meta: dict):
+        name = f"step_{step:08d}"
+        tmp = os.path.join(self.dir, name + ".tmp")
+        final = os.path.join(self.dir, name)
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "meta": meta,
+                       "time": time.time()}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                      # atomic publish
+        with open(os.path.join(self.dir, "latest.tmp"), "w") as f:
+            f.write(name)
+        os.replace(os.path.join(self.dir, "latest.tmp"),
+                   os.path.join(self.dir, "latest"))
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(d for d in os.listdir(self.dir)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for d in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        p = os.path.join(self.dir, "latest")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            name = f.read().strip()
+        man = os.path.join(self.dir, name, "manifest.json")
+        if not os.path.exists(man):
+            return None
+        with open(man) as f:
+            return json.load(f)["step"]
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of ``template``; optionally place each
+        leaf with ``shardings`` (a matching pytree) — this is how an elastic
+        restart re-shards onto a different mesh."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError("no checkpoint found")
+        name = f"step_{step:08d}"
+        with np.load(os.path.join(self.dir, name, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+
+        paths = jax.tree_util.tree_flatten_with_path(template)[0]
+        tdef = jax.tree_util.tree_structure(template)
+        shard_leaves = (jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "mesh"))
+            if shardings is not None else [None] * len(paths))
+        leaves = []
+        for (path, leaf), shard in zip(paths, shard_leaves):
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            arr = flat[key]
+            if hasattr(leaf, "dtype"):
+                arr = arr.astype(leaf.dtype)
+            if shard is not None:
+                arr = jax.device_put(arr, shard)
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(tdef, leaves)

@@ -1,0 +1,192 @@
+"""Optimizers with sharding-aware state: AdamW (fp32 m/v, ZeRO-1 over the
+data axis) and Adafactor (factored second moment — the memory-feasible choice
+for the 671B/132B MoE configs; Adam state for 671B needs >6.7 TB, more than a
+single 256x16GB pod's HBM).
+
+Each optimizer exposes::
+
+    init(params, specs, dist)  -> (state, state_specs)
+    update(grads, state, params) -> (new_params, new_state)
+
+``state_specs`` carry the ZeRO-1 sharding: m/v inherit the param spec, and
+when a param is replicated on the mesh's data axis the optimizer state is
+*additionally* sharded over it (first shardable dim), so total state memory
+scales 1/(data * model).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"              # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    zero1: bool = True               # shard optimizer state over data axis
+    schedule: Optional[Any] = None   # train.schedule.ScheduleConfig
+
+
+def _lr(cfg: "OptConfig", step):
+    if cfg.schedule is None:
+        return cfg.lr
+    from repro.train.schedule import lr_at
+    return lr_at(step, cfg.schedule)
+
+
+def _zero1_spec(spec: P, shape, data_axes) -> P:
+    """Shard optimizer state over the data axis on the first dim that is
+    unsharded and divisible (ZeRO-1).  No-op if 'data' already appears in
+    the spec (e.g. fully-sharded expert weights)."""
+    axes = list(spec) + [None] * (len(shape) - len(spec))
+    for ax in axes:
+        used = ax if isinstance(ax, tuple) else (ax,)
+        if "data" in used:
+            return P(*axes)
+    for i, (ax, dim) in enumerate(zip(axes, shape)):
+        if ax is None and dim % 16 == 0 and dim >= 16:
+            axes[i] = data_axes if isinstance(data_axes, str) else "data"
+            return P(*axes)
+    return P(*axes)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params, specs=None, dist=None, cfg: OptConfig = OptConfig()):
+    m = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    v = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    state = {"m": m, "v": v, "step": jnp.zeros((), jnp.int32)}
+    state_specs = None
+    if specs is not None:
+        zspec = jax.tree.map(
+            lambda sp, p: _zero1_spec(sp, p.shape, "data") if cfg.zero1 else sp,
+            specs, params, is_leaf=lambda x: isinstance(x, P))
+        state_specs = {"m": zspec, "v": zspec, "step": P()}
+    return state, state_specs
+
+
+def adamw_update(grads, state, params, cfg: OptConfig = OptConfig()):
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    lr = _lr(cfg, step)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m2 / bc1
+        vh = v2 / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    newp = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    newm = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    newv = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return newp, {"m": newm, "v": newv, "step": step}, gnorm
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no first moment)
+# ---------------------------------------------------------------------------
+
+def _factored(shape):
+    return len(shape) >= 2 and shape[-1] >= 8 and shape[-2] >= 8
+
+
+def adafactor_init(params, specs=None, dist=None,
+                   cfg: OptConfig = OptConfig(name="adafactor")):
+    def mk(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    state = {"f": jax.tree.map(mk, params), "step": jnp.zeros((), jnp.int32)}
+    state_specs = None
+    if specs is not None:
+        def mk_spec(sp, p):
+            axes = list(sp) + [None] * (p.ndim - len(sp))
+            if _factored(p.shape):
+                return {"vr": P(*axes[:-1]), "vc": P(*(axes[:-2] + axes[-1:]))}
+            return {"v": P(*axes)}
+        state_specs = {"f": jax.tree.map(
+            mk_spec, specs, params, is_leaf=lambda x: isinstance(x, P)),
+            "step": P()}
+    return state, state_specs
+
+
+def adafactor_update(grads, state, params,
+                     cfg: OptConfig = OptConfig(name="adafactor")):
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    lr = _lr(cfg, step)
+    beta2 = 1.0 - t ** -0.8
+
+    def upd(p, g, f):
+        g2 = g * g + 1e-30
+        if _factored(p.shape):
+            vr = beta2 * f["vr"] + (1 - beta2) * g2.mean(-1)
+            vc = beta2 * f["vc"] + (1 - beta2) * g2.mean(-2)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(vr.mean(-1, keepdims=True)[..., None], 1e-30))
+            u = g * jax.lax.rsqrt(denom + 1e-30)
+            nf = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * f["v"] + (1 - beta2) * g2
+            u = g * jax.lax.rsqrt(v + 1e-30)
+            nf = {"v": v}
+        # update clipping (Shazeer & Stern)
+        rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u)
+        newp = p.astype(jnp.float32) - lr * u
+        if p.ndim >= 2:
+            newp = newp - lr * cfg.weight_decay * p.astype(jnp.float32)
+        return newp.astype(p.dtype), nf
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_f = tdef.flatten_up_to(state["f"])
+    new_p, new_f = [], []
+    for p, g, f in zip(flat_p, flat_g, flat_f):
+        np_, nf = upd(p, g, f)
+        new_p.append(np_)
+        new_f.append(nf)
+    return (jax.tree.unflatten(tdef, new_p),
+            {"f": jax.tree.unflatten(tdef, new_f), "step": step}, gnorm)
+
+
+OPTIMIZERS = {
+    "adamw": (adamw_init, adamw_update),
+    "adafactor": (adafactor_init, adafactor_update),
+}

@@ -1,0 +1,34 @@
+"""Learning-rate schedules (warmup + cosine/linear decay) — pure functions
+of the step counter so they live inside the jitted train step."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 2000
+    total_steps: int = 100_000
+    final_frac: float = 0.1          # floor as a fraction of peak
+    kind: str = "cosine"             # cosine | linear | constant
+
+
+def lr_at(step, cfg: ScheduleConfig):
+    """step: int32 scalar (traced ok) -> f32 learning rate."""
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.kind == "constant":
+        decay = 1.0
+    else:
+        frac = jnp.clip((s - cfg.warmup_steps)
+                        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                        0.0, 1.0)
+        if cfg.kind == "cosine":
+            decay = cfg.final_frac + (1 - cfg.final_frac) * 0.5 * (
+                1 + jnp.cos(jnp.pi * frac))
+        else:
+            decay = cfg.final_frac + (1 - cfg.final_frac) * (1 - frac)
+    return cfg.peak_lr * warm * decay

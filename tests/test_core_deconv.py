@@ -1,0 +1,184 @@
+"""Correctness of the HUGE2 core vs XLA oracles, incl. hypothesis sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (huge_conv2d, huge_conv_transpose2d,
+                        huge_dilated_conv2d, untangled_conv2d)
+from repro.core import reference as ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype)
+
+
+def assert_close(a, b, tol=2e-5):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# untangled standard / strided / dilated conv vs lax
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(1, 4),
+       st.integers(1, 3), st.integers(1, 3), st.integers(0, 2), st.integers(0, 2),
+       st.integers(1, 2), st.integers(1, 2))
+def test_untangled_conv_matches_oracle(b, r, s, sh, sw, pl, ph, dh, dw):
+    h = r * dh - dh + sh * 2 + 2   # big enough for >=1 output
+    w = s * dw - dw + sw * 2 + 2
+    c, n = 3, 5
+    k1, k2 = jax.random.split(jax.random.PRNGKey(b * 1000 + r * 100 + s))
+    x = rand(k1, (b, h, w, c))
+    k = rand(k2, (r, s, c, n))
+    got = untangled_conv2d(x, k, strides=(sh, sw),
+                           padding=((pl, ph), (pl, ph)), rhs_dilation=(dh, dw))
+    want = ref.oracle_dilated_conv2d(x, k, dilation=(dh, dw), strides=(sh, sw),
+                                     padding=((pl, ph), (pl, ph)))
+    assert_close(got, want)
+
+
+# ---------------------------------------------------------------------------
+# transposed conv: decomposition + untangling vs oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 2), st.integers(2, 6), st.integers(1, 6), st.integers(1, 4),
+       st.integers(0, 4), st.integers(0, 4), st.integers(1, 4), st.integers(1, 4))
+def test_conv_transpose_matches_oracle(b, h, r, stride, pl, ph, c, n):
+    # keep output size positive
+    out = (h - 1) * stride + pl + ph - r + 2
+    if out <= 0 or pl >= r or ph >= r:
+        return
+    k1, k2 = jax.random.split(jax.random.PRNGKey(h * 77 + r * 7 + stride))
+    x = rand(k1, (b, h, h + 1, c))
+    k = rand(k2, (r, r, c, n))
+    got = huge_conv_transpose2d(x, k, (stride, stride), ((pl, ph), (pl, ph)))
+    want = ref.oracle_conv_transpose2d(x, k, strides=(stride, stride),
+                                       padding=((pl, ph), (pl, ph)))
+    assert_close(got, want)
+
+
+def test_conv_transpose_dcgan_shapes():
+    """The exact Table-1 DCGAN layers (stride 2, 5x5, SAME-style 2x out)."""
+    for (h, c, n) in [(4, 64, 32), (8, 32, 16), (16, 16, 8)]:
+        k1, k2 = jax.random.split(jax.random.PRNGKey(h))
+        x = rand(k1, (2, h, h, c))
+        k = rand(k2, (5, 5, c, n))
+        got = huge_conv_transpose2d(x, k, (2, 2), ((2, 3), (2, 3)))
+        want = ref.oracle_conv_transpose2d(x, k, strides=(2, 2),
+                                           padding=((2, 3), (2, 3)))
+        assert got.shape == (2, 2 * h, 2 * h, n)
+        assert_close(got, want)
+
+
+def test_conv_transpose_stride_gt_kernel():
+    """Phases with zero taps (stride > kernel) must emit zeros."""
+    x = rand(jax.random.PRNGKey(0), (1, 5, 5, 2))
+    k = rand(jax.random.PRNGKey(1), (2, 2, 2, 3))
+    got = huge_conv_transpose2d(x, k, (3, 3), ((0, 0), (0, 0)))
+    want = ref.oracle_conv_transpose2d(x, k, strides=(3, 3),
+                                       padding=((0, 0), (0, 0)))
+    assert_close(got, want)
+
+
+# ---------------------------------------------------------------------------
+# naive (DarkNet) baselines also match the oracle — the comparison is fair
+# ---------------------------------------------------------------------------
+
+def test_naive_baselines_match_oracle():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    x = rand(k1, (2, 6, 7, 3))
+    k = rand(k2, (5, 4, 3, 8))
+    got = ref.naive_conv_transpose2d(x, k, strides=(2, 2), padding=((2, 1), (3, 2)))
+    want = ref.oracle_conv_transpose2d(x, k, strides=(2, 2), padding=((2, 1), (3, 2)))
+    assert_close(got, want)
+    got = ref.naive_dilated_conv2d(x, k, dilation=(2, 2), padding=((4, 4), (3, 3)))
+    want = ref.oracle_dilated_conv2d(x, k, dilation=(2, 2), padding=((4, 4), (3, 3)))
+    assert_close(got, want)
+
+
+# ---------------------------------------------------------------------------
+# §3.2.3 training: custom VJPs match autodiff of the oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride,r,pad", [(2, 5, 2), (2, 4, 1), (3, 3, 0), (1, 3, 1)])
+def test_conv_transpose_vjp_matches_oracle(stride, r, pad):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(stride * 10 + r), 3)
+    x = rand(k1, (2, 5, 6, 3))
+    k = rand(k2, (r, r, 3, 4))
+    pads = ((pad, pad), (pad, pad))
+
+    def f_huge(x, k):
+        return huge_conv_transpose2d(x, k, (stride, stride), pads)
+
+    def f_ora(x, k):
+        return ref.oracle_conv_transpose2d(x, k, strides=(stride, stride), padding=pads)
+
+    y, vjp_h = jax.vjp(f_huge, x, k)
+    y2, vjp_o = jax.vjp(f_ora, x, k)
+    assert_close(y, y2)
+    dy = rand(k3, y.shape)
+    (dx_h, dk_h), (dx_o, dk_o) = vjp_h(dy), vjp_o(dy)
+    assert_close(dx_h, dx_o, tol=1e-4)
+    assert_close(dk_h, dk_o, tol=1e-4)
+
+
+@pytest.mark.parametrize("stride,r,pad", [(2, 5, 2), (2, 4, 1), (1, 3, 1), (3, 4, 0)])
+def test_conv2d_vjp_matches_oracle(stride, r, pad):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(stride * 100 + r), 3)
+    x = rand(k1, (2, 9, 10, 3))
+    k = rand(k2, (r, r, 3, 4))
+    pads = ((pad, pad), (pad, pad))
+
+    def f_huge(x, k):
+        return huge_conv2d(x, k, (stride, stride), pads)
+
+    def f_ora(x, k):
+        return jax.lax.conv_general_dilated(
+            x, k, window_strides=(stride, stride), padding=pads,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    y, vjp_h = jax.vjp(f_huge, x, k)
+    y2, vjp_o = jax.vjp(f_ora, x, k)
+    assert_close(y, y2)
+    dy = rand(k3, y.shape)
+    (dx_h, dk_h), (dx_o, dk_o) = vjp_h(dy), vjp_o(dy)
+    assert_close(dx_h, dx_o, tol=1e-4)
+    assert_close(dk_h, dk_o, tol=1e-4)
+
+
+def test_dilated_conv_autodiff():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(9), 3)
+    x = rand(k1, (1, 9, 9, 2))
+    k = rand(k2, (3, 3, 2, 4))
+
+    def f_huge(x, k):
+        return huge_dilated_conv2d(x, k, dilation=(2, 2), padding=((2, 2), (2, 2)))
+
+    def f_ora(x, k):
+        return ref.oracle_dilated_conv2d(x, k, dilation=(2, 2), padding=((2, 2), (2, 2)))
+
+    y, vjp_h = jax.vjp(f_huge, x, k)
+    y2, vjp_o = jax.vjp(f_ora, x, k)
+    assert_close(y, y2)
+    dy = rand(k3, y.shape)
+    for a, b in zip(vjp_h(dy), vjp_o(dy)):
+        assert_close(a, b, tol=1e-4)
+
+
+def test_flop_advantage_bookkeeping():
+    """Decomposition does s^2 fewer MACs than the zero-inserted naive conv."""
+    h = w = 8; r = s = 5; c, n, stride = 16, 8, 2
+    naive_macs = ((h - 1) * stride + 1 + 4) ** 2 * r * s * c * n  # dense on x_hat
+    huge_macs = 0
+    from repro.core.decompose import plan_phases_1d
+    for p_h in plan_phases_1d(h, r, stride, (2, 2)):
+        for p_w in plan_phases_1d(w, s, stride, (2, 2)):
+            huge_macs += p_h.out_size * p_w.out_size * p_h.taps * p_w.taps * c * n
+    assert naive_macs / huge_macs > (stride * stride) * 0.8

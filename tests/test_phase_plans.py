@@ -1,0 +1,44 @@
+"""Property tests on the decomposition invariants (paper §3.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.decompose import (decompose_kernel, plan_phases_1d,
+                                  transposed_out_size)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 7), st.integers(1, 5),
+       st.integers(0, 6), st.integers(0, 6))
+def test_phase_plans_partition_output(h, k, s, pl, ph):
+    out = transposed_out_size(h, k, s, (pl, ph))
+    if out <= 0:
+        return
+    plans = plan_phases_1d(h, k, s, (pl, ph))
+    assert len(plans) == s
+    # phase sizes partition the output exactly
+    assert sum(p.out_size for p in plans) == out
+    for q, p in enumerate(plans):
+        assert p.phase == q
+        # U_q = |{o in [0, out) : o % s == q}|
+        assert p.out_size == len([o for o in range(out) if o % s == q])
+        # taps of phase q are exactly the kernel rows == rho (mod s)
+        assert p.taps == len(range(p.rho, k, s))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(1, 4),
+       st.integers(1, 4), st.integers(0, 3), st.integers(0, 3))
+def test_decomposed_kernels_partition_taps(r, s_k, sh, sw, plh, plw):
+    """Every kernel tap appears in exactly one phase sub-kernel."""
+    k = jnp.arange(r * s_k * 2 * 3, dtype=jnp.float32).reshape(r, s_k, 2, 3)
+    subs = decompose_kernel(k, (sh, sw), ((plh, plh), (plw, plw)))
+    total = sum(int(np.prod(sub.shape[:2])) for sub in subs.values())
+    assert total == r * s_k
+    # values cover the original kernel exactly once
+    seen = []
+    for sub in subs.values():
+        seen.extend(np.asarray(sub).reshape(-1, 2, 3)[:, 0, 0].tolist())
+    orig = np.asarray(k)[:, :, 0, 0].reshape(-1).tolist()
+    assert sorted(seen) == sorted(orig)

@@ -1,0 +1,100 @@
+"""Continuous batcher, LR schedule, and file-backed data pipeline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import transformer as tfm
+from repro.serving.batcher import ContinuousBatcher, Request
+from repro.train import optim as opt
+from repro.train.data import FileTokenPipeline
+from repro.train.schedule import ScheduleConfig, lr_at
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+def test_continuous_batcher_completes_and_matches_sequential():
+    cfg = registry.get_reduced("llama3.2-1b")
+    params, _ = tfm.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, p).astype(np.int32)
+               for p in (3, 5, 2, 4, 3)]
+    cb = ContinuousBatcher(cfg, params, slots=2, max_len=16)
+    for i, p in enumerate(prompts):
+        cb.submit(Request(rid=i, prompt=p, max_new=4))
+    steps = cb.run()
+    assert len(cb.done) == 5
+    st = cb.stats()
+    assert st["completed"] == 5 and st["p50_latency_s"] > 0
+    # 2 slots, 5 requests: continuous batching must beat one-at-a-time steps
+    sequential_steps = sum(len(p) + 4 - 1 for p in prompts)
+    assert steps < sequential_steps
+
+    # correctness: batcher greedy output == manual greedy decode
+    r0 = next(r for r in cb.done if r.rid == 0)
+    cache, _ = tfm.init_cache(cfg, 1, 16)
+    toks = list(prompts[0])
+    out = []
+    for t in range(len(prompts[0]) + 3):
+        cur = np.array([[toks[t] if t < len(toks) else out[-1]]], np.int32)
+        logits, cache = tfm.decode_step(params, cache, jnp.asarray(cur), t,
+                                        cfg)
+        if t >= len(prompts[0]) - 1:
+            out.append(int(np.argmax(np.asarray(logits[0, -1]))))
+    assert r0.out == out, (r0.out, out)
+
+
+# ---------------------------------------------------------------------------
+# LR schedule
+# ---------------------------------------------------------------------------
+
+def test_schedule_warmup_and_decay():
+    sc = ScheduleConfig(peak_lr=1.0, warmup_steps=10, total_steps=110,
+                        kind="cosine", final_frac=0.1)
+    assert float(lr_at(0, sc)) == 0.0
+    assert float(lr_at(5, sc)) == pytest.approx(0.5)
+    assert float(lr_at(10, sc)) == pytest.approx(1.0)
+    assert float(lr_at(60, sc)) == pytest.approx(0.55, abs=0.02)  # mid-cosine
+    assert float(lr_at(110, sc)) == pytest.approx(0.1)
+    lin = ScheduleConfig(peak_lr=2.0, warmup_steps=0, total_steps=100,
+                         kind="linear", final_frac=0.0)
+    assert float(lr_at(50, lin)) == pytest.approx(1.0)
+
+
+def test_adamw_uses_schedule():
+    sc = ScheduleConfig(peak_lr=0.1, warmup_steps=100, total_steps=1000)
+    cfg = opt.OptConfig(lr=999.0, schedule=sc, weight_decay=0.0)
+    params = {"w": jnp.ones((4,))}
+    state, _ = opt.adamw_init(params)
+    g = {"w": jnp.ones((4,))}
+    newp, state, _ = opt.adamw_update(g, state, params, cfg)
+    # at step 1 of warmup, lr ~ 0.001 -> tiny update, NOT the bogus lr=999
+    delta = float(jnp.abs(newp["w"] - params["w"]).max())
+    assert delta < 0.01
+
+
+# ---------------------------------------------------------------------------
+# file-backed token pipeline
+# ---------------------------------------------------------------------------
+
+def test_file_pipeline_roundtrip(tmp_path):
+    cfg = registry.get_reduced("llama3.2-1b")
+    path = os.path.join(tmp_path, "tokens.bin")
+    toks = np.arange(10_000, dtype=np.uint32)
+    FileTokenPipeline.write_token_file(path, toks)
+    pipe = FileTokenPipeline(path, cfg, batch=4, seq=16, seed=3)
+    b0 = pipe.batch_at(0)
+    assert b0["inputs"].shape == (4, 16)
+    # targets are inputs shifted by one position in the source stream
+    np.testing.assert_array_equal(b0["inputs"][:, 1:], b0["targets"][:, :-1])
+    # deterministic by step
+    pipe2 = FileTokenPipeline(path, cfg, batch=4, seq=16, seed=3)
+    np.testing.assert_array_equal(b0["inputs"], pipe2.batch_at(0)["inputs"])
+    assert not np.array_equal(b0["inputs"], pipe.batch_at(1)["inputs"])
+    # tokens bounded by vocab
+    assert (b0["inputs"] < cfg.vocab_size).all()

@@ -1,0 +1,152 @@
+"""Sharding rule resolution, input specs, and roofline accounting units."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.base import SHAPES, ShapeConfig
+from repro.launch import roofline as rl
+from repro.launch import specs as specs_lib
+from repro.models import transformer as tfm
+from repro.sharding import DEFAULT_RULES, DistContext
+
+
+class FakeMesh:
+    """Duck-typed mesh: enough for make_dist rule logic."""
+    def __init__(self, shape):
+        self._shape = dict(shape)
+        self.axis_names = tuple(self._shape)
+        self.size = int(np.prod(list(self._shape.values())))
+
+    @property
+    def shape(self):
+        return self._shape
+
+
+def make_dist_for(arch, shape_name, mesh_shape=(("data", 16), ("model", 16)),
+                  **kw):
+    from repro.launch.steps import make_dist
+    cfg = registry.get_config(arch)
+    return make_dist(FakeMesh(mesh_shape), cfg, SHAPES[shape_name], **kw), cfg
+
+
+def test_ssm_arch_disables_tp():
+    dist, _ = make_dist_for("mamba2-130m", "train_4k")
+    assert dist.rules["heads"] is None and dist.rules["ffn"] is None
+    assert dist.rules["vocab"] == "model"
+
+
+def test_decode_small_kv_heads_shards_cache_seq():
+    dist, _ = make_dist_for("qwen2-7b", "decode_32k")
+    assert dist.rules["kv_heads"] is None
+    assert dist.rules["kv_seq"] == "model"
+
+
+def test_mla_decode_shards_cache_seq():
+    dist, _ = make_dist_for("deepseek-v3-671b", "decode_32k")
+    assert dist.rules["kv_seq"] == "model"
+
+
+def test_long_context_decode_replicates_batch():
+    dist, _ = make_dist_for("mamba2-130m", "long_500k")
+    assert dist.rules["batch"] is None
+    assert dist.rules["kv_seq"] == "data"
+
+
+def test_huge_moe_experts_fully_sharded():
+    dist, _ = make_dist_for("deepseek-v3-671b", "train_4k")
+    assert dist.rules["expert"] == ("data", "model")
+    dist, _ = make_dist_for("dbrx-132b", "train_4k")
+    assert dist.rules["expert"] == "model"
+    assert dist.rules["expert_ffn"] == "data"
+
+
+def test_dp_only_rules():
+    dist, _ = make_dist_for("llama3.2-1b", "train_4k", parallelism="dp_only")
+    assert dist.rules["heads"] is None and dist.rules["vocab"] is None
+    assert dist.rules["batch"] == ("data", "model")
+
+
+def test_resolve_logical_spec():
+    dist = DistContext(mesh=None, rules=dict(DEFAULT_RULES))
+    assert dist.resolve(P(None, "heads")) == P(None, "model")
+    assert dist.resolve(P("vocab", None)) == P("model", None)
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "seamless-m4t-large-v2",
+                                  "qwen2-vl-2b"])
+def test_batch_specs_shapes(arch):
+    cfg = registry.get_config(arch)
+    sds, shard = specs_lib.batch_specs(cfg, SHAPES["train_4k"])
+    assert sds["inputs"].shape == (256, 4096)
+    assert "targets" in sds
+    if cfg.is_encoder_decoder:
+        assert sds["src_embeds"].shape == (256, specs_lib.SRC_FRAMES,
+                                           cfg.d_model)
+    if cfg.frontend == "vlm_stub":
+        assert sds["embeds"].shape == (256, 4096, cfg.d_model)
+    assert set(shard) == set(sds)
+
+
+def test_param_specs_no_allocation():
+    cfg = registry.get_config("llama3.2-1b")
+    sds, logical = specs_lib.param_specs(cfg)
+    leaves = jax.tree.leaves(sds)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    n = sum(int(np.prod(l.shape)) for l in leaves)
+    assert 1.0e9 < n < 2.0e9          # ~1.24B params + padded vocab
+    # specs tree mirrors params tree
+    jax.tree.map(lambda a, b: None, sds,
+                 jax.tree.map(lambda x: x, logical,
+                              is_leaf=lambda x: isinstance(x, P)))
+
+
+def test_cache_specs_match_shapes():
+    cfg = registry.get_config("gemma3-1b")
+    cache_sds, logical = specs_lib.cache_specs(cfg, SHAPES["decode_32k"])
+    k0 = cache_sds[0]["l0"]["k"]
+    assert k0.shape[1:] == (128, 32768, cfg.num_kv_heads, cfg.head_dim)
+
+
+# ---------------------------------------------------------------------------
+# roofline accounting
+# ---------------------------------------------------------------------------
+
+def test_active_params_close_to_actual_dense():
+    cfg = registry.get_reduced("llama3.2-1b")
+    params, _ = tfm.init(jax.random.PRNGKey(0), cfg)
+    actual = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    est = rl.active_param_count(cfg)
+    # estimate excludes norms and (for tied) counts the head once
+    assert 0.7 * actual < est < 1.3 * actual
+
+
+def test_moe_active_far_below_total():
+    cfg = registry.get_config("deepseek-v3-671b")
+    active = rl.active_param_count(cfg)
+    # ~37B active of 671B total
+    assert 2.5e10 < active < 6e10
+
+
+def test_model_flops_shapes():
+    cfg = registry.get_config("qwen2-7b")
+    tr = rl.model_flops_for(cfg, SHAPES["train_4k"])
+    pf = rl.model_flops_for(cfg, SHAPES["prefill_32k"])
+    dc = rl.model_flops_for(cfg, SHAPES["decode_32k"])
+    assert tr > pf > dc
+    assert tr / pf == pytest.approx(3.0, rel=0.01)   # 6ND vs 2ND same tokens
+
+
+def test_dominant_and_mfu():
+    r = rl.Roofline(compute_s=1.0, memory_s=2.0, collective_s=0.5,
+                    flops=197e12, bytes_hbm=1.0, bytes_coll=1.0,
+                    model_flops=256 * 197e12, chips=256)
+    assert r.dominant == "memory"
+    assert r.mfu == pytest.approx(0.5)
+    assert r.flops_ratio == pytest.approx(1.0)
