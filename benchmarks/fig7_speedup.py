@@ -1,7 +1,14 @@
 """Paper Fig. 7: inference speedup of HUGE2 (decomposition + untangling)
 over the DarkNet-style naive engine (zero-insertion + im2col GEMM), per
 DCGAN / cGAN deconvolution layer.  Wall-clock on this host's CPU — the same
-comparison the paper ran on the Jetson CPU (batch=1 edge inference)."""
+comparison the paper ran on the Jetson CPU (batch=1 edge inference).
+
+Both engines get their offline weight prep (the planned engine packs
+kernels at model load; DarkNet reshapes to the GEMM layout at load).  The
+``unplanned_us`` column times the same planned executor but with the raw
+kernel as a call argument, i.e. re-packing traced into every call — the
+load-time-vs-call-time gap the plan/executor refactor removes.
+"""
 from __future__ import annotations
 
 import functools
@@ -12,16 +19,13 @@ import jax.numpy as jnp
 from benchmarks.util import csv_row, time_fn
 from repro.core import huge_conv_transpose2d
 from repro.core import reference as ref
+from repro.core.plan import ConvSpec, plan_conv
 from repro.models.gan import CGAN_LAYERS, DCGAN_LAYERS, deconv_padding
 
 BATCH = 1
 
 
 def bench_layer(l, backend="xla"):
-    """Both engines get offline weight prep (the paper's engine decomposes
-    kernels at model load; DarkNet reshapes to the GEMM layout at load)."""
-    from repro.core.engine import (huge_conv_transpose2d_pre,
-                                   precompute_transposed_weights)
     pad = deconv_padding(l.kernel, l.stride)
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (BATCH, l.in_hw, l.in_hw, l.in_c), jnp.float32)
@@ -30,35 +34,44 @@ def bench_layer(l, backend="xla"):
     strides = (l.stride, l.stride)
     khw = (l.kernel, l.kernel)
 
-    w_flat = k.reshape(l.kernel * l.kernel * l.in_c, l.out_c)   # offline
-    subs = precompute_transposed_weights(k, strides, pad)        # offline
+    plan = plan_conv(ConvSpec(                                   # offline
+        kind="transposed", in_hw=(l.in_hw, l.in_hw), in_c=l.in_c,
+        out_c=l.out_c, kernel_hw=khw, strides=strides, padding=pad,
+        backend=backend))
+    packed = jax.block_until_ready(plan.pack(k))                 # offline
+    w_flat = k.reshape(l.kernel * l.kernel * l.in_c, l.out_c)    # offline
 
     naive = jax.jit(functools.partial(ref.naive_conv_transpose2d_pre,
                                       kernel_hw=khw, strides=strides,
                                       padding=pad))
-    huge = jax.jit(functools.partial(huge_conv_transpose2d_pre,
-                                     kernel_hw=khw, strides=strides,
-                                     padding=pad))
-    # correctness guard: both paths match the XLA oracle
+    planned = jax.jit(plan.apply)
+    unplanned = jax.jit(functools.partial(huge_conv_transpose2d,
+                                          strides=strides, padding=pad))
+    # correctness guard: every path matches the XLA oracle
     import numpy as np
     want = ref.oracle_conv_transpose2d(x, k, strides=strides, padding=pad)
-    np.testing.assert_allclose(np.asarray(huge(x, subs)), np.asarray(want),
-                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(planned(x, packed)),
+                               np.asarray(want), rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(np.asarray(naive(x, w_flat)),
                                np.asarray(want), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(unplanned(x, k)),
+                               np.asarray(want), rtol=2e-4, atol=2e-4)
     t_naive = time_fn(naive, x, w_flat)
-    t_huge = time_fn(huge, x, subs)
-    return t_naive, t_huge
+    t_huge = time_fn(planned, x, packed)
+    t_unplanned = time_fn(unplanned, x, k)
+    return t_naive, t_huge, t_unplanned
 
 
 def main(print_csv=True):
     rows = []
     for gan, layers in (("DCGAN", DCGAN_LAYERS), ("cGAN", CGAN_LAYERS)):
         for i, l in enumerate(layers):
-            tn, th = bench_layer(l)
+            tn, th, tu = bench_layer(l)
             rows.append(csv_row(f"fig7_{gan}_DC{i + 1}", th * 1e6,
                                 f"naive_us={tn * 1e6:.1f} "
-                                f"speedup={tn / th:.2f}x"))
+                                f"speedup={tn / th:.2f}x "
+                                f"unplanned_us={tu * 1e6:.1f} "
+                                f"plan_gain={tu / th:.2f}x"))
     if print_csv:
         for r in rows:
             print(r)

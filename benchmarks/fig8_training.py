@@ -21,6 +21,8 @@ BATCH = 4
 
 
 def naive_generator_apply(p, z, cfg):
+    """Naive engine on *undecomposed* (R,S,C,N) kernels — feed it
+    ``gan.generator_unpack``-ed params."""
     l0 = cfg.layers[0]
     x = (z @ p["proj"]).reshape(z.shape[0], l0.in_hw, l0.in_hw, l0.in_c)
     x = jax.nn.relu(x)
@@ -42,7 +44,8 @@ def main(print_csv=True):
                       ("DCGAN_head", gan.GANConfig(
                           "dcgan_head", gan.DCGAN_LAYERS[2:], z_dim=100))):
         key = jax.random.PRNGKey(0)
-        gp, _ = gan.generator_init(key, cfg)
+        gp, _ = gan.generator_init(key, cfg)          # packed (planned) params
+        gp_raw = gan.generator_unpack(gp, cfg)        # full kernels for naive
         z = jax.random.normal(key, (BATCH, cfg.z_dim), jnp.float32)
 
         def loss_huge(gp, z):
@@ -54,7 +57,7 @@ def main(print_csv=True):
         g_huge = jax.jit(jax.grad(loss_huge))
         g_naive = jax.jit(jax.grad(loss_naive))
         th = time_fn(g_huge, gp, z, iters=5)
-        tn = time_fn(g_naive, gp, z, iters=5)
+        tn = time_fn(g_naive, gp_raw, z, iters=5)
         rows.append(csv_row(f"fig8_train_{name}", th * 1e6,
                             f"naive_us={tn * 1e6:.1f} "
                             f"speedup={tn / th:.2f}x"))

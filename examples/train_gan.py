@@ -36,8 +36,15 @@ def main():
     cfg = gan.GANConfig("dcgan-small", SMALL_LAYERS)
     key = jax.random.PRNGKey(0)
     kg, kd = jax.random.split(key)
+    # load-time planning: generator weights are packed into the plans'
+    # GEMM-ready layout; fwd AND bwd run on packed buffers from here on.
+    g_plans = gan.generator_plans(cfg)
+    d_plans = gan.discriminator_plans(cfg)
     gp, _ = gan.generator_init(kg, cfg)
     dp, _ = gan.discriminator_init(kd, cfg)
+    print(f"planned {len(g_plans)} deconv + {len(d_plans)} conv sites "
+          f"at model load "
+          f"({sum(p.build_ms for p in g_plans + d_plans):.2f} ms plan build)")
     pipe = GANPipeline(cfg, args.batch, image_hw=32)
 
     @jax.jit

@@ -1,5 +1,11 @@
-"""HUGE² public ops: decomposed + untangled deconvolutions with the paper's
-GAN-training backward formulations wired as ``jax.custom_vjp``.
+"""HUGE² public ops: thin dispatchers over the plan/executor engine.
+
+Every convolution site is described by a ``ConvSpec`` and compiled exactly
+once by ``repro.core.plan.plan_conv`` into a ``ConvPlan`` (keyed LRU cache).
+The plan owns all the geometry the old engine recomputed inside every jitted
+call — phase decomposition (§3.1), untangled execution paths (§3.2), VMEM
+tile selection, and the §3.2.3 backward schedules — so these wrappers only
+build the spec from argument shapes and hand off.
 
 Forward ops
 -----------
@@ -7,290 +13,48 @@ Forward ops
 - ``huge_conv2d``            — strided conv (discriminator) via untangling.
 - ``huge_dilated_conv2d``    — §3.2.2 untangled atrous conv (no kernel zeros).
 
-Backward (§3.2.3, Fig. 6)
--------------------------
+Backward (§3.2.3, Fig. 6) lives on the plans as ``jax.custom_vjp`` rules that
+run on the *packed* weight layout:
 - grad-wrt-input of a transposed conv == a *strided* conv of the output
-  derivative maps (discriminator-style) — computed through the engine.
-- grad-wrt-kernel == a *dilated* convolution in which one operand acts as an
-  s-dilated kernel sliding over the other, contracted over the batch — the
-  paper's "make C copies of the N derivative maps to form dilated kernels".
+  derivative maps, with tap panels fetched straight from the packed buffers.
+- grad-wrt-kernel == a *dilated* convolution over the derivative maps,
+  emitted directly in the packed per-phase layout.
+
+Note these wrappers take the full HWIO kernel and therefore *pack per call*
+(the slicing is traced into the jitted computation).  That is fine for
+experimentation and keeps the seed API; serving and training hot paths
+should hold packed weights and call ``plan.apply`` directly — see
+``repro.models.gan`` for the load-time pattern.
 
 Every VJP here is validated in tests against ``jax.vjp`` of the XLA oracle.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Sequence
-
-import jax
-import jax.numpy as jnp
-
 from repro.core import decompose as dec
-from repro.core import untangle as unt
-from repro.core.untangle import pad_or_crop
+from repro.core.plan import conv_spec, norm_padding, plan_conv
 
-Pair = tuple[int, int]
-
-
-def _norm_padding(padding, k_hw) -> tuple[Pair, Pair]:
-    if isinstance(padding, str):
-        r, s = k_hw
-        if padding.upper() == "SAME":
-            return ((r // 2, (r - 1) // 2), (s // 2, (s - 1) // 2))
-        if padding.upper() == "VALID":
-            return ((0, 0), (0, 0))
-        raise ValueError(padding)
-    (a, b) = padding
-    if isinstance(a, int):
-        return ((a, a), (b, b))
-    return (tuple(a), tuple(b))
+# kept under the old private name for callers inside the package
+_norm_padding = norm_padding
 
 
-# ---------------------------------------------------------------------------
-# forward implementations
-# ---------------------------------------------------------------------------
-
-def _conv_transpose_fwd(x, kernel, strides, padding, backend="xla"):
-    """Phase-decomposed, untangled transposed conv (NHWC / HWIO)."""
-    r, s, c, n = kernel.shape
-    (sh, sw), (ph, pw) = strides, padding
-    h, w = x.shape[-3], x.shape[-2]
-    plans_h = dec.plan_phases_1d(h, r, sh, ph)
-    plans_w = dec.plan_phases_1d(w, s, sw, pw)
-    oh = dec.transposed_out_size(h, r, sh, ph)
-    ow = dec.transposed_out_size(w, s, sw, pw)
-    subs = dec.decompose_kernel(kernel, strides, padding)
-    outs = {}
-    for qh in range(sh):
-        for qw in range(sw):
-            p_h, p_w = plans_h[qh], plans_w[qw]
-            sub = subs[(qh, qw)]
-            if p_h.taps == 0 or p_w.taps == 0 or p_h.out_size == 0 or p_w.out_size == 0:
-                outs[(qh, qw)] = jnp.zeros(
-                    (*x.shape[:-3], p_h.out_size, p_w.out_size, n), x.dtype)
-                continue
-            if backend == "pallas":
-                from repro.kernels import ops as kops
-                outs[(qh, qw)] = kops.untangled_conv2d(
-                    x, sub, strides=(1, 1), padding=(p_h.pad, p_w.pad))
-            else:
-                outs[(qh, qw)] = unt.untangled_conv2d(
-                    x, sub, strides=(1, 1), padding=(p_h.pad, p_w.pad))
-    return dec.interleave_phases(outs, strides, (oh, ow))
-
-
-def _conv_fwd(x, kernel, strides, padding, backend="xla"):
-    if backend == "pallas":
-        from repro.kernels import ops as kops
-        return kops.untangled_conv2d(x, kernel, strides=strides, padding=padding)
-    return unt.untangled_conv2d(x, kernel, strides=strides, padding=padding)
-
-
-# ---------------------------------------------------------------------------
-# §3.2.3 gradient building blocks
-# ---------------------------------------------------------------------------
-
-def _flip_swap(kernel):
-    """(R,S,C,N) -> spatially flipped, channels swapped (R,S,N,C)."""
-    return jnp.transpose(jnp.flip(kernel, (0, 1)), (0, 1, 3, 2))
-
-
-def _grad_kernel_dilated(inp, dy, k_hw, strides, padding):
-    """dK for a *transposed* conv: slide ``inp`` (H taps, s-dilated) over the
-    padded derivative maps, contracting batch — the paper's dilated-kernel
-    convolution, computed tap-by-tap with GEMMs (no zeros materialized).
-
-    dK[r, s', c, n] = sum_{b,u,v} inp[b,u,v,c] * dy_pad[b, sh*u + R-1-r, sw*v + S-1-s', n]
-    """
-    r, s = k_hw
-    (sh, sw), (ph, pw) = strides, padding
-    hh, ww = inp.shape[-3], inp.shape[-2]
-    dy_p = pad_or_crop(dy, ((r - 1 - ph[0], r - 1 - ph[1]),
-                            (s - 1 - pw[0], s - 1 - pw[1])))
-    rows = []
-    for rr in range(r):
-        cols = []
-        for ss in range(s):
-            wnd = jax.lax.slice(
-                dy_p, [0, r - 1 - rr, s - 1 - ss, 0],
-                [dy_p.shape[0], r - 1 - rr + sh * (hh - 1) + 1,
-                 s - 1 - ss + sw * (ww - 1) + 1, dy_p.shape[3]],
-                [1, sh, sw, 1])
-            cols.append(jnp.einsum("buvc,buvn->cn", inp, wnd,
-                                   preferred_element_type=jnp.float32))
-        rows.append(jnp.stack(cols, 0))
-    return jnp.stack(rows, 0)
-
-
-def _grad_kernel_strided(x, dy, k_hw, strides, padding):
-    """dK for a *strided* conv (discriminator): correlate the padded input
-    with the s-dilated derivative maps (paper Fig. 6 step 3).
-
-    dK[r, s', c, n] = sum_{b,o,o2} x_pad[b, sh*o + r, sw*o2 + s', c] * dy[b,o,o2,n]
-    """
-    r, s = k_hw
-    (sh, sw), (ph, pw) = strides, padding
-    oh, ow = dy.shape[-3], dy.shape[-2]
-    x_p = pad_or_crop(x, (ph, pw))
-    rows = []
-    for rr in range(r):
-        cols = []
-        for ss in range(s):
-            wnd = jax.lax.slice(
-                x_p, [0, rr, ss, 0],
-                [x_p.shape[0], rr + sh * (oh - 1) + 1,
-                 ss + sw * (ow - 1) + 1, x_p.shape[3]],
-                [1, sh, sw, 1])
-            cols.append(jnp.einsum("bouc,boun->cn", wnd, dy,
-                                   preferred_element_type=jnp.float32))
-        rows.append(jnp.stack(cols, 0))
-    return jnp.stack(rows, 0)
-
-
-# ---------------------------------------------------------------------------
-# public ops with custom VJPs
-# ---------------------------------------------------------------------------
-
-# ---------------------------------------------------------------------------
-# offline weight decomposition (serving fast path, §Perf P0)
-# ---------------------------------------------------------------------------
-#
-# Slicing the full kernel into phase sub-kernels *inside* the jitted call
-# costs ~R*S strided copies of the whole weight per invocation — measured
-# 25-30 ms/call on DCGAN DC1, dwarfing the 5 ms of useful GEMMs.  A real
-# engine (like the paper's) decomposes weights once at model-load time.
-
-def precompute_transposed_weights(kernel, strides, padding):
-    """Offline: slice + flatten phase sub-kernels.  Returns
-    {(qh, qw): (T_h*T_w*C, N) array} — tap-major, GEMM-ready."""
-    padding = _norm_padding(padding, kernel.shape[:2])
-    subs = dec.decompose_kernel(kernel, tuple(strides), padding)
-    out = {}
-    for q, sub in subs.items():
-        th, tw, c, n = sub.shape
-        out[q] = sub.reshape(th * tw * c, n) if th * tw else sub
-    return out
-
-
-def huge_conv_transpose2d_pre(x, pre_subs, kernel_hw, strides=(2, 2),
-                              padding=((2, 2), (2, 2))):
-    """Transposed conv with offline-decomposed weights: per phase, build the
-    tap buffer from the *raw* input (zero-free) and issue one wide GEMM."""
-    r, s = kernel_hw
-    strides = tuple(strides)
-    padding = _norm_padding(padding, kernel_hw)
-    (sh, sw), (ph, pw) = strides, padding
-    h, w = x.shape[-3], x.shape[-2]
-    plans_h = dec.plan_phases_1d(h, r, sh, ph)
-    plans_w = dec.plan_phases_1d(w, s, sw, pw)
-    oh = dec.transposed_out_size(h, r, sh, ph)
-    ow = dec.transposed_out_size(w, s, sw, pw)
-    outs = {}
-    for qh in range(sh):
-        for qw in range(sw):
-            p_h, p_w = plans_h[qh], plans_w[qw]
-            sub = pre_subs[(qh, qw)]
-            if p_h.taps == 0 or p_w.taps == 0 or min(p_h.out_size,
-                                                     p_w.out_size) == 0:
-                outs[(qh, qw)] = jnp.zeros(
-                    (*x.shape[:-3], p_h.out_size, p_w.out_size,
-                     sub.shape[-1]), x.dtype)
-                continue
-            xp = pad_or_crop(x, (p_h.pad, p_w.pad))
-            uo, vo = p_h.out_size, p_w.out_size
-            buf = jnp.concatenate(
-                [jax.lax.slice(
-                    xp, [0] * (x.ndim - 3) + [m, n, 0],
-                    list(xp.shape[:-3]) + [m + uo, n + vo, xp.shape[-1]])
-                 for m in range(p_h.taps) for n in range(p_w.taps)], axis=-1)
-            y = jax.lax.dot_general(
-                buf, sub, (((buf.ndim - 1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)
-            outs[(qh, qw)] = y.astype(x.dtype)
-    return dec.interleave_phases(outs, strides, (oh, ow))
-
-
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
 def huge_conv_transpose2d(x, kernel, strides=(2, 2), padding=((2, 2), (2, 2)),
                           backend="xla"):
-    """Transposed conv via phase decomposition + untangling.
+    """Transposed conv via a cached plan (phase decomposition + untangling).
 
-    x: (B,H,W,C); kernel: (R,S,C,N) HWIO.  Semantics identical to
+    x: (...,H,W,C); kernel: (R,S,C,N) HWIO.  Semantics identical to
     ``lax.conv_general_dilated(..., lhs_dilation=strides, padding=padding)``.
     """
-    padding = _norm_padding(padding, kernel.shape[:2])
-    return _conv_transpose_fwd(x, kernel, tuple(strides), padding, backend)
+    spec = conv_spec("transposed", x.shape, kernel.shape, strides=strides,
+                     padding=padding, dtype=x.dtype, backend=backend)
+    return plan_conv(spec).apply_kernel(x, kernel)
 
 
-def _ct_fwd(x, kernel, strides, padding, backend):
-    padding = _norm_padding(padding, kernel.shape[:2])
-    return _conv_transpose_fwd(x, kernel, tuple(strides), padding, backend), (x, kernel)
-
-
-def _ct_bwd(strides, padding, backend, res, dy):
-    x, kernel = res
-    r, s = kernel.shape[0], kernel.shape[1]
-    padding = _norm_padding(padding, (r, s))
-    (ph, pw) = padding
-    # dx: strided conv of dy with the flipped/swapped kernel (discriminator
-    # form) — routed through the Pallas kernel when the fwd was
-    bwd_pads = ((r - 1 - ph[0], r - 1 - ph[1]),
-                (s - 1 - pw[0], s - 1 - pw[1]))
-    if backend == "pallas":
-        from repro.kernels import ops as kops
-        dx = kops.untangled_conv2d(dy, _flip_swap(kernel),
-                                   strides=tuple(strides),
-                                   padding=bwd_pads).astype(x.dtype)
-    else:
-        dx = unt.untangled_conv2d(
-            dy, _flip_swap(kernel), strides=tuple(strides),
-            padding=bwd_pads, out_dtype=x.dtype)
-    # dK: dilated-kernel convolution over the derivative maps (paper Fig. 6)
-    dk = _grad_kernel_dilated(x, dy, (r, s), tuple(strides), padding)
-    return dx, dk.astype(kernel.dtype)
-
-
-huge_conv_transpose2d.defvjp(_ct_fwd, _ct_bwd)
-
-
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
 def huge_conv2d(x, kernel, strides=(1, 1), padding=((0, 0), (0, 0)),
                 backend="xla"):
     """Standard / strided conv via untangling (discriminator layers)."""
-    padding = _norm_padding(padding, kernel.shape[:2])
-    return _conv_fwd(x, kernel, tuple(strides), padding, backend)
-
-
-def _c_fwd(x, kernel, strides, padding, backend):
-    padding = _norm_padding(padding, kernel.shape[:2])
-    return _conv_fwd(x, kernel, tuple(strides), padding, backend), (x, kernel)
-
-
-def _c_bwd(strides, padding, backend, res, dy):
-    x, kernel = res
-    r, s = kernel.shape[0], kernel.shape[1]
-    padding = _norm_padding(padding, (r, s))
-    (ph, pw) = padding
-    # dx of a strided conv == transposed conv of dy (generator form).  When the
-    # stride does not tile the input exactly, the tail input pixels still
-    # receive gradient from in-range dy taps: extend the high padding so the
-    # transposed conv emits exactly H (resp. W) outputs.
-    h, w = x.shape[-3], x.shape[-2]
-    (sh, sw) = strides
-    oh, ow = dy.shape[-3], dy.shape[-2]
-    def_h = h - ((oh - 1) * sh + (r - 1 - ph[0]) + (r - 1 - ph[1]) - r + 2)
-    def_w = w - ((ow - 1) * sw + (s - 1 - pw[0]) + (s - 1 - pw[1]) - s + 2)
-    dx = _conv_transpose_fwd(
-        dy, _flip_swap(kernel), tuple(strides),
-        ((r - 1 - ph[0], r - 1 - ph[1] + def_h),
-         (s - 1 - pw[0], s - 1 - pw[1] + def_w)),
-        "xla").astype(x.dtype)
-    assert dx.shape[-3:] == x.shape[-3:], (dx.shape, x.shape)
-    dk = _grad_kernel_strided(x, dy, (r, s), tuple(strides), padding)
-    return dx, dk.astype(kernel.dtype)
-
-
-huge_conv2d.defvjp(_c_fwd, _c_bwd)
+    spec = conv_spec("conv", x.shape, kernel.shape, strides=strides,
+                     padding=padding, dtype=x.dtype, backend=backend)
+    return plan_conv(spec).apply(x, kernel)
 
 
 def huge_dilated_conv2d(x, kernel, *, dilation=(2, 2), strides=(1, 1),
@@ -299,11 +63,40 @@ def huge_dilated_conv2d(x, kernel, *, dilation=(2, 2), strides=(1, 1),
 
     Differentiable through JAX autodiff (slices + GEMMs only).
     """
-    padding = _norm_padding(padding, kernel.shape[:2])
-    if backend == "pallas":
-        from repro.kernels import ops as kops
-        return kops.untangled_conv2d(x, kernel, strides=tuple(strides),
-                                     padding=padding,
-                                     rhs_dilation=tuple(dilation))
-    return unt.untangled_conv2d(x, kernel, strides=tuple(strides),
-                                padding=padding, rhs_dilation=tuple(dilation))
+    spec = conv_spec("dilated", x.shape, kernel.shape, strides=strides,
+                     padding=padding, dilation=dilation, dtype=x.dtype,
+                     backend=backend)
+    return plan_conv(spec).apply(x, kernel)
+
+
+# ---------------------------------------------------------------------------
+# legacy offline-decomposition API (pre-plan era), kept as thin adapters
+# ---------------------------------------------------------------------------
+
+def precompute_transposed_weights(kernel, strides, padding):
+    """Offline: slice + flatten phase sub-kernels.  Returns
+    {(qh, qw): (T_h*T_w*C, N) array} — tap-major, GEMM-ready.
+
+    Same layout as ``ConvPlan.pack`` but tuple-keyed; prefer building a plan
+    and calling ``plan.pack`` directly.
+    """
+    padding = norm_padding(padding, kernel.shape[:2])
+    subs = dec.decompose_kernel(kernel, tuple(strides), padding)
+    return {q: sub.reshape(-1, sub.shape[-1]) for q, sub in subs.items()}
+
+
+def huge_conv_transpose2d_pre(x, pre_subs, kernel_hw, strides=(2, 2),
+                              padding=((2, 2), (2, 2))):
+    """Transposed conv with offline-decomposed weights (legacy entry).
+
+    Adapts the tuple-keyed ``pre_subs`` onto the planned executor — the
+    execution itself is ``ConvPlan.apply``, not a separate code path.
+    """
+    n = max(sub.shape[-1] for sub in pre_subs.values())
+    spec = conv_spec("transposed", x.shape,
+                     (kernel_hw[0], kernel_hw[1], x.shape[-1], n),
+                     strides=strides, padding=padding, dtype=x.dtype,
+                     backend="xla")
+    plan = plan_conv(spec)
+    packed = {ex.key: pre_subs[ex.q] for ex in plan.phases}
+    return plan.apply(x, packed)

@@ -1,0 +1,527 @@
+"""Plan/executor engine: every HUGE² conv is *planned once* at model-load.
+
+The paper's central claim is that transposed / strided / dilated convolutions
+should be decomposed **offline** and executed as zero-free GEMMs with maximal
+data reuse.  This module is that offline step made explicit:
+
+- ``ConvSpec``   — a hashable description of one convolution site (op kind,
+  spatial/channel shapes, strides, padding, dilation, dtype, backend policy).
+- ``plan_conv``  — compiles a spec into a ``ConvPlan`` exactly once (keyed
+  LRU cache); everything the old engine recomputed inside every jitted call
+  is captured here: per-phase ``PhasePlan1D`` geometry, the execution path
+  per phase (Pallas whole-plane / XLA fused-taps / XLA per-tap GEMMs, with
+  VMEM tile sizes chosen at plan time), and the mirrored backward schedules.
+- ``ConvPlan.pack``    — slices the HWIO kernel into GEMM-ready per-phase
+  sub-kernels, flattened tap-major to ``(T_h*T_w*C, N)``.  Done once at
+  model load; the packed buffers *are* the model's parameters from then on.
+- ``ConvPlan.apply``   — executes the planned convolution on packed weights.
+  For the transposed and strided kinds this is a ``jax.custom_vjp`` whose
+  backward also runs on the packed layout:
+
+  * dx of a transposed conv — the §3.2.3 *strided-conv* form: per-tap GEMMs
+    of the padded derivative maps against panels fetched straight out of the
+    packed phase buffers (no kernel reassembly, no zeros).
+  * dK of a transposed conv — the §3.2.3 *dilated-kernel* form, emitted
+    directly in the packed per-phase layout.
+
+No other module slices kernels at execution time; ``repro.core.engine`` and
+``repro.kernels.ops`` are thin dispatchers over this cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import decompose as dec
+from repro.core.untangle import pad_or_crop
+
+Pair = tuple[int, int]
+
+# leave headroom below the 16 MiB/core VMEM of v5e (moved from kernels.ops)
+_VMEM_BUDGET = 12 * 1024 * 1024
+
+# plan-time fuse heuristic: concatenate tap views + one wide GEMM when the
+# GEMM has too few rows to amortize per-tap dispatch (paper Fig. 7 DC1).
+_FUSE_MAX_ROWS = 128
+
+
+def norm_padding(padding, k_hw) -> tuple[Pair, Pair]:
+    """Normalize 'SAME'/'VALID'/int-pair/nested paddings to ((lo,hi),(lo,hi))."""
+    if isinstance(padding, str):
+        r, s = k_hw
+        if padding.upper() == "SAME":
+            return ((r // 2, (r - 1) // 2), (s // 2, (s - 1) // 2))
+        if padding.upper() == "VALID":
+            return ((0, 0), (0, 0))
+        raise ValueError(padding)
+    (a, b) = padding
+    if isinstance(a, int):
+        return ((a, a), (b, b))
+    return (tuple(a), tuple(b))
+
+
+def flip_swap(kernel):
+    """(R,S,C,N) -> spatially flipped, channels swapped (R,S,N,C)."""
+    return jnp.transpose(jnp.flip(kernel, (0, 1)), (0, 1, 3, 2))
+
+
+def pick_vmem_tiles(hp, wp, c, n, r, s, oh, ow, itemsize):
+    """Largest MXU-aligned (C_t, N_t) whose working set fits VMEM.
+
+    Plan-time replacement for the old per-call ``kernels.ops._pick_tiles``.
+    """
+    from repro.kernels.untangled_conv import vmem_bytes_estimate
+    for n_t in (256, 128, 64, 32, 16, 8):
+        for c_t in (256, 128, 64, 32, 16, 8):
+            if c_t > max(c, 8) * 2 or n_t > max(n, 8) * 2:
+                continue
+            if vmem_bytes_estimate(hp, wp, min(c_t, c), r, s, min(n_t, n),
+                                   oh, ow, itemsize) <= _VMEM_BUDGET:
+                return min(c_t, c), min(n_t, n)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# spec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """Hashable description of one convolution site — the plan-cache key."""
+
+    kind: str                     # 'transposed' | 'conv' | 'dilated'
+    in_hw: Pair                   # input spatial (H, W)
+    in_c: int
+    out_c: int
+    kernel_hw: Pair               # (R, S)
+    strides: Pair = (1, 1)
+    padding: tuple[Pair, Pair] = ((0, 0), (0, 0))
+    dilation: Pair = (1, 1)
+    dtype: str = "float32"
+    backend: str = "auto"         # 'auto' | 'xla' | 'pallas'
+
+
+def conv_spec(kind: str, x_shape: Sequence[int], kernel_shape: Sequence[int],
+              *, strides=(1, 1), padding=((0, 0), (0, 0)), dilation=(1, 1),
+              dtype=None, backend: str = "auto") -> ConvSpec:
+    """Build a normalized (cache-canonical) spec from array shapes."""
+    r, s, c, n = kernel_shape
+    if x_shape[-1] != c:
+        raise ValueError(f"channel mismatch {x_shape[-1]} vs {c}")
+    return ConvSpec(
+        kind=kind, in_hw=(int(x_shape[-3]), int(x_shape[-2])),
+        in_c=int(c), out_c=int(n), kernel_hw=(int(r), int(s)),
+        strides=tuple(int(v) for v in strides),
+        padding=norm_padding(padding, (r, s)),
+        dilation=tuple(int(v) for v in dilation),
+        dtype=str(jnp.dtype(dtype)) if dtype is not None else "float32",
+        backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# per-phase execution record
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PhaseExec:
+    """Plan-time execution record for one output phase (or the whole conv)."""
+
+    key: str                      # packed-weights pytree key
+    q: Pair                       # (q_h, q_w) output phase
+    rho: Pair                     # first kernel tap per dim
+    taps: Pair                    # (T_h, T_w) sub-kernel extent
+    pad: tuple[Pair, Pair]        # input pad/crop for this phase's stride-1 conv
+    out_hw: Pair                  # (U, V) phase output extent
+    path: str                     # 'zeros' | 'fused' | 'taps' | 'pallas'
+    tiles: Pair | None            # (C_t, N_t) when path == 'pallas'
+
+
+def _choose_path(backend: str, hp: int, wp: int, c: int, n: int,
+                 taps: Pair, out_hw: Pair, itemsize: int) -> tuple[str, Pair | None]:
+    th, tw = taps
+    u, v = out_hw
+    if th == 0 or tw == 0 or u == 0 or v == 0:
+        return "zeros", None
+    want_pallas = backend == "pallas" or (
+        backend == "auto" and jax.default_backend() == "tpu")
+    if want_pallas:
+        tiles = pick_vmem_tiles(hp, wp, c, n, th, tw, u, v, itemsize)
+        if tiles is not None:
+            return "pallas", tiles
+    if u * v <= _FUSE_MAX_ROWS and th * tw > 2:
+        return "fused", None
+    return "taps", None
+
+
+# ---------------------------------------------------------------------------
+# plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(eq=False)
+class ConvPlan:
+    """Compiled execution plan.  Identity-hashable (plans are cache singletons),
+    so it can ride through ``jax.custom_vjp`` as a static argument."""
+
+    spec: ConvSpec
+    out_hw: Pair
+    phases: tuple[PhaseExec, ...]          # len 1 for 'conv'/'dilated'
+    bwd_pad: tuple[Pair, Pair] | None      # transposed: dy padding for dx/dK
+    dx_taps: tuple[tuple, ...] | None      # transposed: (m, n, key, flat_row)
+    conv_bwd: "ConvPlan | None"            # conv: child transposed plan for dx
+    build_ms: float = 0.0
+
+    # -- weight layout -----------------------------------------------------
+    def pack(self, kernel: jax.Array):
+        """Kernel (R,S,C,N) -> packed GEMM-ready weights.
+
+        'transposed': {key: (T_h*T_w*C, N)} tap-major flattened phase
+        sub-kernels.  'conv'/'dilated': the kernel itself (identity pack —
+        untangling reads taps in place, there is nothing to pre-slice).
+        """
+        if self.spec.kind != "transposed":
+            return kernel
+        subs = dec.decompose_kernel(kernel, self.spec.strides,
+                                    self.spec.padding)
+        packed = {}
+        for ex in self.phases:
+            sub = subs[ex.q]
+            th, tw = ex.taps
+            packed[ex.key] = sub.reshape(th * tw * self.spec.in_c,
+                                         self.spec.out_c)
+        return packed
+
+    def unpack(self, packed):
+        """Packed weights -> full (R,S,C,N) kernel (offline use only)."""
+        if self.spec.kind != "transposed":
+            return packed
+        r, s = self.spec.kernel_hw
+        c, n = self.spec.in_c, self.spec.out_c
+        (sh, sw) = self.spec.strides
+        sample = next(iter(packed.values()))
+        kernel = jnp.zeros((r, s, c, n), sample.dtype)
+        for ex in self.phases:
+            th, tw = ex.taps
+            if th == 0 or tw == 0:
+                continue
+            sub = packed[ex.key].reshape(th, tw, c, n)
+            kernel = kernel.at[ex.rho[0]::sh, ex.rho[1]::sw].set(sub)
+        return kernel
+
+    # -- execution ---------------------------------------------------------
+    def apply(self, x: jax.Array, packed) -> jax.Array:
+        """Planned execution on packed weights (differentiable)."""
+        if (tuple(x.shape[-3:-1]) != self.spec.in_hw
+                or x.shape[-1] != self.spec.in_c):
+            raise ValueError(
+                f"input {x.shape[-3:]} does not match plan spec "
+                f"{self.spec.in_hw + (self.spec.in_c,)} — plans bake geometry "
+                f"at build time; plan_conv a spec for this shape")
+        if self.spec.kind == "transposed":
+            return _planned_transposed(self, x, packed)
+        if self.spec.kind == "conv":
+            return _planned_conv(self, x, packed)
+        return _dilated_fwd(self, x, packed)       # autodiff through slices
+
+    __call__ = apply
+
+    def apply_kernel(self, x: jax.Array, kernel: jax.Array) -> jax.Array:
+        """Compatibility path: pack per call, then execute.  Under jit this
+        re-slices the kernel every invocation — serve from ``pack`` instead."""
+        return self.apply(x, self.pack(kernel))
+
+
+@functools.lru_cache(maxsize=4096)
+def plan_conv(spec: ConvSpec) -> ConvPlan:
+    """Compile ``spec`` into a ``ConvPlan`` (LRU-cached; one build per live
+    site — the bound only matters for workloads cycling through thousands of
+    distinct shapes, which evict oldest-first rather than grow unbounded)."""
+    t0 = time.perf_counter()
+    itemsize = jnp.dtype(spec.dtype).itemsize
+    h, w = spec.in_hw
+    r, s = spec.kernel_hw
+    c, n = spec.in_c, spec.out_c
+    (sh, sw) = spec.strides
+    (ph, pw) = spec.padding
+
+    if spec.kind == "transposed":
+        if spec.dilation != (1, 1):
+            raise ValueError("transposed plans do not support rhs dilation")
+        plans_h = dec.plan_phases_1d(h, r, sh, ph)
+        plans_w = dec.plan_phases_1d(w, s, sw, pw)
+        oh = dec.transposed_out_size(h, r, sh, ph)
+        ow = dec.transposed_out_size(w, s, sw, pw)
+        phases = []
+        for p_h in plans_h:
+            for p_w in plans_w:
+                taps = (p_h.taps, p_w.taps)
+                out_hw = (p_h.out_size, p_w.out_size)
+                hp = h + p_h.pad[0] + p_h.pad[1]
+                wp = w + p_w.pad[0] + p_w.pad[1]
+                path, tiles = _choose_path(spec.backend, hp, wp, c, n,
+                                           taps, out_hw, itemsize)
+                phases.append(PhaseExec(
+                    key=f"q{p_h.phase}x{p_w.phase}", q=(p_h.phase, p_w.phase),
+                    rho=(p_h.rho, p_w.rho), taps=taps,
+                    pad=(p_h.pad, p_w.pad), out_hw=out_hw,
+                    path=path, tiles=tiles))
+        # dx schedule (strided-conv form): tap (m, n) of the flipped/swapped
+        # kernel reads full-kernel tap (r-1-m, s-1-n), which lives in phase
+        # ((pl-r') % s) at flat row r'//s within the packed buffer.
+        by_q = {ex.q: ex for ex in phases}
+        dx_taps = []
+        for m in range(r):
+            for nn in range(s):
+                rp, sp = r - 1 - m, s - 1 - nn
+                qh, qw = (ph[0] - rp) % sh, (pw[0] - sp) % sw
+                ex = by_q[(qh, qw)]
+                row = (rp // sh) * ex.taps[1] + (sp // sw)
+                dx_taps.append((m, nn, ex.key, row))
+        bwd_pad = ((r - 1 - ph[0], r - 1 - ph[1]),
+                   (s - 1 - pw[0], s - 1 - pw[1]))
+        plan = ConvPlan(spec=spec, out_hw=(oh, ow), phases=tuple(phases),
+                        bwd_pad=bwd_pad, dx_taps=tuple(dx_taps),
+                        conv_bwd=None)
+
+    elif spec.kind in ("conv", "dilated"):
+        (dh, dw) = spec.dilation if spec.kind == "dilated" else (1, 1)
+        hp, wp = h + ph[0] + ph[1], w + pw[0] + pw[1]
+        oh = (hp - (r - 1) * dh - 1) // sh + 1
+        ow = (wp - (s - 1) * dw - 1) // sw + 1
+        if oh <= 0 or ow <= 0:
+            raise ValueError(f"non-positive output {oh}x{ow}")
+        path, tiles = _choose_path(spec.backend, hp, wp, c, n, (r, s),
+                                   (oh, ow), itemsize)
+        ex = PhaseExec(key="k", q=(0, 0), rho=(0, 0), taps=(r, s),
+                       pad=spec.padding, out_hw=(oh, ow), path=path,
+                       tiles=tiles)
+        conv_bwd = None
+        if spec.kind == "conv":
+            # mirrored dx plan: transposed conv of dy with the flipped/swapped
+            # kernel.  When the stride does not tile the input exactly, extend
+            # the high padding so the transposed conv emits exactly H (resp. W).
+            def_h = h - ((oh - 1) * sh + (r - 1 - ph[0]) + (r - 1 - ph[1])
+                         - r + 2)
+            def_w = w - ((ow - 1) * sw + (s - 1 - pw[0]) + (s - 1 - pw[1])
+                         - s + 2)
+            conv_bwd = plan_conv(ConvSpec(
+                kind="transposed", in_hw=(oh, ow), in_c=n, out_c=c,
+                kernel_hw=(r, s), strides=(sh, sw),
+                padding=((r - 1 - ph[0], r - 1 - ph[1] + def_h),
+                         (s - 1 - pw[0], s - 1 - pw[1] + def_w)),
+                dtype=spec.dtype, backend="xla"))
+        plan = ConvPlan(spec=spec, out_hw=(oh, ow), phases=(ex,),
+                        bwd_pad=None, dx_taps=None, conv_bwd=conv_bwd)
+    else:
+        raise ValueError(f"unknown conv kind {spec.kind!r}")
+
+    plan.build_ms = (time.perf_counter() - t0) * 1e3
+    return plan
+
+
+def plan_cache_info():
+    return plan_conv.cache_info()
+
+
+def plan_cache_clear():
+    plan_conv.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# executors (all geometry is plan-time constant)
+# ---------------------------------------------------------------------------
+
+def _exec_phase(xp: jax.Array, sub4: jax.Array, ex: PhaseExec, strides: Pair,
+                dilation: Pair, out_dtype, interpret=None) -> jax.Array:
+    """One planned stride/dilation correlation of pre-padded ``xp`` with the
+    4-D sub-kernel, along the path chosen at plan time."""
+    th, tw = ex.taps
+    u, v = ex.out_hw
+    (sh, sw), (dh, dw) = strides, dilation
+    cc = xp.shape[-1]
+
+    def tap_view(m, nn):
+        return jax.lax.slice(
+            xp, [0] * (xp.ndim - 3) + [m * dh, nn * dw, 0],
+            list(xp.shape[:-3]) + [m * dh + (u - 1) * sh + 1,
+                                   nn * dw + (v - 1) * sw + 1, cc],
+            [1] * (xp.ndim - 3) + [sh, sw, 1])
+
+    if ex.path == "pallas":
+        from repro.kernels.untangled_conv import untangled_conv2d_pallas
+        lead = xp.shape[:-3]
+        xp4 = xp.reshape((-1,) + xp.shape[-3:])
+        y = untangled_conv2d_pallas(xp4, sub4, strides=strides,
+                                    rhs_dilation=dilation,
+                                    c_tile=ex.tiles[0], n_tile=ex.tiles[1],
+                                    out_dtype=out_dtype, interpret=interpret)
+        return y.reshape(lead + y.shape[1:])
+    if ex.path == "fused":
+        buf = jnp.concatenate([tap_view(m, nn) for m in range(th)
+                               for nn in range(tw)], axis=-1)
+        w2 = sub4.reshape(th * tw * cc, sub4.shape[-1])
+        y = jax.lax.dot_general(buf, w2, (((buf.ndim - 1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        return y.astype(out_dtype)
+    acc = None
+    for m in range(th):
+        for nn in range(tw):
+            xs = tap_view(m, nn)
+            t = jax.lax.dot_general(
+                xs, sub4[m, nn], (((xs.ndim - 1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            acc = t if acc is None else acc + t
+    return acc.astype(out_dtype)
+
+
+def _transposed_fwd(plan: ConvPlan, x, packed, interpret=None):
+    spec = plan.spec
+    c, n = spec.in_c, spec.out_c
+    outs = {}
+    for ex in plan.phases:
+        if ex.path == "zeros":
+            outs[ex.q] = jnp.zeros(
+                (*x.shape[:-3], ex.out_hw[0], ex.out_hw[1], n), x.dtype)
+            continue
+        th, tw = ex.taps
+        sub4 = packed[ex.key].reshape(th, tw, c, n)
+        xp = pad_or_crop(x, ex.pad)
+        outs[ex.q] = _exec_phase(xp, sub4, ex, (1, 1), (1, 1), x.dtype,
+                                 interpret)
+    return dec.interleave_phases(outs, spec.strides, plan.out_hw)
+
+
+def _conv_fwd(plan: ConvPlan, x, kernel, interpret=None):
+    ex = plan.phases[0]
+    xp = pad_or_crop(x, ex.pad)
+    return _exec_phase(xp, kernel, ex, plan.spec.strides, (1, 1), x.dtype,
+                       interpret)
+
+
+def _dilated_fwd(plan: ConvPlan, x, kernel, interpret=None):
+    ex = plan.phases[0]
+    xp = pad_or_crop(x, ex.pad)
+    return _exec_phase(xp, kernel, ex, plan.spec.strides, plan.spec.dilation,
+                       x.dtype, interpret)
+
+
+# ---------------------------------------------------------------------------
+# transposed conv: custom VJP on packed weights (§3.2.3, Fig. 6)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _planned_transposed(plan: ConvPlan, x, packed):
+    return _transposed_fwd(plan, x, packed)
+
+
+def _pt_fwd(plan, x, packed):
+    return _transposed_fwd(plan, x, packed), (x, packed)
+
+
+def _pt_bwd(plan, res, dy):
+    x, packed = res
+    spec = plan.spec
+    h, w = spec.in_hw
+    r, s = spec.kernel_hw
+    (sh, sw) = spec.strides
+    c = spec.in_c
+    x4 = x.reshape((-1,) + x.shape[-3:])
+    dy4 = dy.reshape((-1,) + dy.shape[-3:])
+    dy_p = pad_or_crop(dy4, plan.bwd_pad)
+
+    # dx — strided-conv form, panels fetched from the packed phase buffers.
+    acc = None
+    for (m, nn, key, row) in plan.dx_taps:
+        panel = jax.lax.slice(packed[key], [row * c, 0],
+                              [(row + 1) * c, spec.out_c])   # (C, N)
+        wnd = jax.lax.slice(
+            dy_p, [0, m, nn, 0],
+            [dy_p.shape[0], m + sh * (h - 1) + 1, nn + sw * (w - 1) + 1,
+             dy_p.shape[3]], [1, sh, sw, 1])
+        t = jax.lax.dot_general(wnd, panel, (((wnd.ndim - 1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        acc = t if acc is None else acc + t
+    dx = acc.astype(x.dtype).reshape(x.shape)
+
+    # dK — dilated-kernel form, emitted directly in the packed layout.
+    dk = {}
+    for ex in plan.phases:
+        th, tw = ex.taps
+        if th == 0 or tw == 0:
+            dk[ex.key] = jnp.zeros(packed[ex.key].shape,
+                                   packed[ex.key].dtype)
+            continue
+        rows = []
+        for t_h in range(th):
+            rr = ex.rho[0] + sh * t_h
+            cols = []
+            for t_w in range(tw):
+                ss = ex.rho[1] + sw * t_w
+                wnd = jax.lax.slice(
+                    dy_p, [0, r - 1 - rr, s - 1 - ss, 0],
+                    [dy_p.shape[0], r - 1 - rr + sh * (h - 1) + 1,
+                     s - 1 - ss + sw * (w - 1) + 1, dy_p.shape[3]],
+                    [1, sh, sw, 1])
+                cols.append(jnp.einsum("buvc,buvn->cn", x4, wnd,
+                                       preferred_element_type=jnp.float32))
+            rows.append(jnp.stack(cols, 0))
+        sub = jnp.stack(rows, 0)                      # (T_h, T_w, C, N)
+        dk[ex.key] = sub.reshape(th * tw * c, spec.out_c).astype(
+            packed[ex.key].dtype)
+    return dx, dk
+
+
+_planned_transposed.defvjp(_pt_fwd, _pt_bwd)
+
+
+# ---------------------------------------------------------------------------
+# strided conv: custom VJP mirrored through a child transposed plan
+# ---------------------------------------------------------------------------
+
+def _grad_kernel_strided(plan: ConvPlan, x4, dy4):
+    """dK of a strided conv: correlate the padded input with the s-dilated
+    derivative maps (paper Fig. 6 step 3), tap by tap."""
+    spec = plan.spec
+    r, s = spec.kernel_hw
+    (sh, sw) = spec.strides
+    oh, ow = plan.out_hw
+    x_p = pad_or_crop(x4, spec.padding)
+    rows = []
+    for rr in range(r):
+        cols = []
+        for ss in range(s):
+            wnd = jax.lax.slice(
+                x_p, [0, rr, ss, 0],
+                [x_p.shape[0], rr + sh * (oh - 1) + 1,
+                 ss + sw * (ow - 1) + 1, x_p.shape[3]],
+                [1, sh, sw, 1])
+            cols.append(jnp.einsum("bouc,boun->cn", wnd, dy4,
+                                   preferred_element_type=jnp.float32))
+        rows.append(jnp.stack(cols, 0))
+    return jnp.stack(rows, 0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _planned_conv(plan: ConvPlan, x, kernel):
+    return _conv_fwd(plan, x, kernel)
+
+
+def _pc_fwd(plan, x, kernel):
+    return _conv_fwd(plan, x, kernel), (x, kernel)
+
+
+def _pc_bwd(plan, res, dy):
+    x, kernel = res
+    x4 = x.reshape((-1,) + x.shape[-3:])
+    dy4 = dy.reshape((-1,) + dy.shape[-3:])
+    dx = plan.conv_bwd.apply_kernel(dy4, flip_swap(kernel)).astype(x.dtype)
+    dx = dx.reshape(x.shape)
+    dk = _grad_kernel_strided(plan, x4, dy4).astype(kernel.dtype)
+    return dx, dk
+
+
+_planned_conv.defvjp(_pc_fwd, _pc_bwd)

@@ -1,9 +1,10 @@
 """jit'd dispatch wrapper around the Pallas untangled-conv kernel.
 
-Handles padding/cropping, VMEM-aware tile selection, and the pure-JAX
-fallback when a plane does not fit the whole-plane blocking (large
-segmentation maps) — the public entry the engine's ``backend='pallas'``
-path uses.
+Since the plan/executor refactor this is a thin shim: padding geometry,
+VMEM-aware tile selection, and the Pallas-vs-XLA fallback decision all live
+in ``repro.core.plan`` (made once per ``ConvSpec``, not per call).  The shim
+exists so kernel-level callers and tests keep a stable entry point with an
+explicit ``interpret`` knob.
 """
 from __future__ import annotations
 
@@ -11,28 +12,14 @@ from functools import partial
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.untangle import pad_or_crop, untangled_conv2d as _xla_untangled
-from repro.kernels.untangled_conv import (untangled_conv2d_pallas,
-                                          vmem_bytes_estimate)
+from repro.core.plan import (conv_spec, pick_vmem_tiles, plan_conv,
+                             _conv_fwd, _dilated_fwd)
 
 Pair = tuple[int, int]
 
-# leave headroom below the 16 MiB/core VMEM of v5e
-_VMEM_BUDGET = 12 * 1024 * 1024
-
-
-def _pick_tiles(hp, wp, c, n, r, s, oh, ow, itemsize):
-    """Largest MXU-aligned (C_t, N_t) whose working set fits VMEM."""
-    for n_t in (256, 128, 64, 32, 16, 8):
-        for c_t in (256, 128, 64, 32, 16, 8):
-            if c_t > max(c, 8) * 2 or n_t > max(n, 8) * 2:
-                continue
-            if vmem_bytes_estimate(hp, wp, min(c_t, c), r, s, min(n_t, n),
-                                   oh, ow, itemsize) <= _VMEM_BUDGET:
-                return min(c_t, c), min(n_t, n)
-    return None
+# kept under the old private name for any in-tree callers
+_pick_tiles = pick_vmem_tiles
 
 
 @partial(jax.jit, static_argnames=("strides", "padding", "rhs_dilation",
@@ -43,23 +30,11 @@ def untangled_conv2d(x: jax.Array, kernel: jax.Array, *,
                      rhs_dilation: Pair = (1, 1),
                      interpret: bool | None = None) -> jax.Array:
     """Untangled convolution, Pallas-tiled when the plane fits VMEM."""
-    r, s, c, n = kernel.shape
-    xp = pad_or_crop(x, padding)
-    lead = xp.shape[:-3]
-    xp4 = xp.reshape((-1,) + xp.shape[-3:])
-    hp, wp = xp4.shape[1], xp4.shape[2]
-    sh, sw = strides
-    dh, dw = rhs_dilation
-    oh = (hp - (r - 1) * dh - 1) // sh + 1
-    ow = (wp - (s - 1) * dw - 1) // sw + 1
-    tiles = _pick_tiles(hp, wp, c, n, r, s, oh, ow, 4)
-    if tiles is None:
-        # plane too large for whole-plane VMEM blocking: XLA fallback
-        y = _xla_untangled(x, kernel, strides=strides, padding=padding,
-                           rhs_dilation=rhs_dilation)
-        return y
-    c_t, n_t = tiles
-    y = untangled_conv2d_pallas(xp4, kernel, strides=strides,
-                                rhs_dilation=rhs_dilation, c_tile=c_t,
-                                n_tile=n_t, interpret=interpret)
-    return y.reshape(lead + y.shape[1:])
+    kind = "dilated" if tuple(rhs_dilation) != (1, 1) else "conv"
+    spec = conv_spec(kind, x.shape, kernel.shape, strides=strides,
+                     padding=padding, dilation=rhs_dilation, dtype=x.dtype,
+                     backend="pallas")
+    plan = plan_conv(spec)
+    if kind == "dilated":
+        return _dilated_fwd(plan, x, kernel, interpret)
+    return _conv_fwd(plan, x, kernel, interpret)

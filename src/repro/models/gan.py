@@ -1,21 +1,29 @@
-"""DCGAN / cGAN (paper Table 1) built on the HUGE2 engine ops.
+"""DCGAN / cGAN (paper Table 1) built on the HUGE² plan/executor engine.
 
 Generators stack the exact Table-1 transposed-conv layers; discriminators
-mirror them with strided convs.  All convolutions run through
-``huge_conv_transpose2d`` / ``huge_conv2d`` whose custom VJPs implement the
-paper's §3.2.3 training formulation, so both inference *and* training
-exercise the engine.
+mirror them with strided convs.  Every convolution site gets a ``ConvPlan``
+built **once at model load** (``generator_plans`` / ``discriminator_plans``,
+backed by the keyed plan cache) and the generator's deconv weights are stored
+*packed* — GEMM-ready per-phase sub-kernels — so the generator never
+re-slices a kernel inside a jitted call, forward or backward.  The plans'
+custom VJPs implement the paper's §3.2.3 training formulation directly on
+the packed layout, so both inference *and* training exercise the engine.
+(The discriminator keeps undecomposed HWIO kernels; its backward flips and
+packs per step, which is off the serving hot path.)
+
+The ``backend`` field of ``GANConfig`` is a plan policy ('xla' | 'pallas' |
+'auto') consumed at plan-build time; it is no longer threaded through the
+apply functions call-by-call.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import huge_conv2d, huge_conv_transpose2d
+from repro.core.plan import ConvPlan, ConvSpec, plan_conv
 from repro.layers import common as cm
 
 
@@ -57,40 +65,94 @@ class GANConfig:
     name: str
     layers: tuple[DeconvLayer, ...]
     z_dim: int = 100
-    backend: str = "xla"            # 'xla' | 'pallas'
+    backend: str = "xla"            # plan policy: 'xla' | 'pallas' | 'auto'
 
 
 DCGAN = GANConfig("dcgan", DCGAN_LAYERS)
 CGAN = GANConfig("cgan", CGAN_LAYERS, z_dim=110)   # z + 10-class condition
 
 
+# ---------------------------------------------------------------------------
+# load-time planning: one ConvPlan per convolution site
+# ---------------------------------------------------------------------------
+
+def generator_plans(cfg: GANConfig, dtype=jnp.float32) -> tuple[ConvPlan, ...]:
+    """Plans for every generator deconv site (cached; build cost paid once)."""
+    plans = []
+    for l in cfg.layers:
+        plans.append(plan_conv(ConvSpec(
+            kind="transposed", in_hw=(l.in_hw, l.in_hw), in_c=l.in_c,
+            out_c=l.out_c, kernel_hw=(l.kernel, l.kernel),
+            strides=(l.stride, l.stride),
+            padding=deconv_padding(l.kernel, l.stride),
+            dtype=str(jnp.dtype(dtype)), backend=cfg.backend)))
+    return tuple(plans)
+
+
+def discriminator_plans(cfg: GANConfig,
+                        dtype=jnp.float32) -> tuple[ConvPlan, ...]:
+    """Plans for the mirrored strided-conv sites (image -> features)."""
+    plans = []
+    for l in reversed(cfg.layers):
+        k = l.kernel
+        plans.append(plan_conv(ConvSpec(
+            kind="conv", in_hw=(l.in_hw * l.stride, l.in_hw * l.stride),
+            in_c=l.out_c, out_c=l.in_c, kernel_hw=(k, k),
+            strides=(l.stride, l.stride),
+            padding=((k // 2, (k - 1) // 2), (k // 2, (k - 1) // 2)),
+            dtype=str(jnp.dtype(dtype)), backend=cfg.backend)))
+    return tuple(plans)
+
+
+# ---------------------------------------------------------------------------
+# generator: packed deconv weights, planned execution
+# ---------------------------------------------------------------------------
+
 def generator_init(key, cfg: GANConfig, dtype=jnp.float32):
+    """Init generator params with the deconv weights already *packed* into
+    the plans' GEMM-ready per-phase layout (the load-time decomposition)."""
+    plans = generator_plans(cfg, dtype)
     l0 = cfg.layers[0]
     ks = jax.random.split(key, len(cfg.layers) + 1)
     p = {"proj": jax.random.normal(
         ks[0], (cfg.z_dim, l0.in_hw * l0.in_hw * l0.in_c), dtype) * 0.02}
     s = {"proj": cm.spec(None, "model")}
     for i, l in enumerate(cfg.layers):
-        p[f"dc{i}"] = jax.random.normal(
+        kernel = jax.random.normal(
             ks[i + 1], (l.kernel, l.kernel, l.in_c, l.out_c), dtype) * 0.02
+        p[f"dc{i}"] = plans[i].pack(kernel)
         p[f"b{i}"] = jnp.zeros((l.out_c,), dtype)
-        s[f"dc{i}"] = cm.spec(None, None, None, "model")
+        # packed buffers are (T_h*T_w*C, N): shard the output-channel dim
+        s[f"dc{i}"] = {k: cm.spec(None, "model") for k in p[f"dc{i}"]}
         s[f"b{i}"] = cm.spec("model")
     return p, s
 
 
 def generator_apply(p, z, cfg: GANConfig):
+    plans = generator_plans(cfg, z.dtype)      # cache hits after model load
     l0 = cfg.layers[0]
     x = (z @ p["proj"]).reshape(z.shape[0], l0.in_hw, l0.in_hw, l0.in_c)
     x = jax.nn.relu(x)
-    for i, l in enumerate(cfg.layers):
-        pad = deconv_padding(l.kernel, l.stride)
-        x = huge_conv_transpose2d(x, p[f"dc{i}"], (l.stride, l.stride), pad,
-                                  cfg.backend)
+    for i, plan in enumerate(plans):
+        x = plan.apply(x, p[f"dc{i}"])
         x = x + p[f"b{i}"]
-        x = jnp.tanh(x) if i == len(cfg.layers) - 1 else jax.nn.relu(x)
+        x = jnp.tanh(x) if i == len(plans) - 1 else jax.nn.relu(x)
     return x
 
+
+def generator_unpack(p, cfg: GANConfig):
+    """Packed generator params -> full (R,S,C,N) HWIO kernels (offline use:
+    export, or feeding baselines that expect undecomposed weights)."""
+    plans = generator_plans(cfg)
+    out = dict(p)
+    for i, plan in enumerate(plans):
+        out[f"dc{i}"] = plan.unpack(p[f"dc{i}"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# discriminator: planned strided convs (identity packing)
+# ---------------------------------------------------------------------------
 
 def discriminator_init(key, cfg: GANConfig, dtype=jnp.float32):
     layers = tuple(reversed(cfg.layers))
@@ -109,11 +171,9 @@ def discriminator_init(key, cfg: GANConfig, dtype=jnp.float32):
 
 
 def discriminator_apply(p, x, cfg: GANConfig):
-    layers = tuple(reversed(cfg.layers))
-    for i, l in enumerate(layers):
-        pad = ((l.kernel // 2, (l.kernel - 1) // 2),
-               (l.kernel // 2, (l.kernel - 1) // 2))
-        x = huge_conv2d(x, p[f"c{i}"], (l.stride, l.stride), pad, cfg.backend)
+    plans = discriminator_plans(cfg, x.dtype)
+    for i, plan in enumerate(plans):
+        x = plan.apply(x, p[f"c{i}"])
         x = jax.nn.leaky_relu(x, 0.2)
     return x.reshape(x.shape[0], -1) @ p["head"]
 

@@ -13,6 +13,36 @@ ENV = dict(os.environ,
            PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
+def _mesh_capability() -> str | None:
+    """Probe (in the same forced-device subprocess the tests use) whether the
+    host can build the 2x2 mesh these tests need.  Returns a skip reason, or
+    None when the prerequisites are met."""
+    probe = (
+        "import jax\n"
+        "assert hasattr(jax, 'shard_map'), 'jax.shard_map unavailable'\n"
+        "from repro.launch.mesh import make_host_mesh\n"
+        "m = make_host_mesh(data=2, model=2)\n"
+        "print(len(list(m.devices.flat)))\n")
+    try:
+        r = subprocess.run([sys.executable, "-c", probe], env=ENV,
+                           capture_output=True, text=True, timeout=120)
+    except Exception as e:  # noqa: BLE001 - any probe failure means skip
+        return f"mesh probe failed to run: {e}"
+    if r.returncode != 0:
+        tail = (r.stderr.strip().splitlines() or ["unknown error"])[-1]
+        return f"host mesh unavailable: {tail}"
+    n = int(r.stdout.strip() or 0)
+    if n < 4:
+        return f"need a 2x2 host mesh, got {n} device(s)"
+    return None
+
+
+_SKIP_REASON = _mesh_capability()
+pytestmark = pytest.mark.skipif(
+    _SKIP_REASON is not None,
+    reason=f"distributed prerequisites not met: {_SKIP_REASON}")
+
+
 def run_py(code: str, timeout=600):
     r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                        env=ENV, capture_output=True, text=True,
