@@ -3,15 +3,26 @@ over the DarkNet-style naive engine (zero-insertion + im2col GEMM), per
 DCGAN / cGAN deconvolution layer.  Wall-clock on this host's CPU — the same
 comparison the paper ran on the Jetson CPU (batch=1 edge inference).
 
-Both engines get their offline weight prep (the planned engine packs
-kernels at model load; DarkNet reshapes to the GEMM layout at load).  The
-``unplanned_us`` column times the same planned executor but with the raw
-kernel as a call argument, i.e. re-packing traced into every call — the
-load-time-vs-call-time gap the plan/executor refactor removes.
+Engines measured per layer:
+
+- ``naive_us``     — DarkNet pipeline with load-time weight reshape.
+- ``planned_us``   — the fused single-launch executor (``plan.apply`` on the
+  superpacked weights: one wide GEMM / one Pallas launch per conv site).
+- ``per_phase_us`` — the PR-1 per-phase planned executor (one pad + GEMM
+  chain per phase, stack/transpose interleave) on the same superpack; the
+  ``fused_vs_per_phase`` column is the speedup of fusing all phases into
+  one pass over one input residency.
+- ``unplanned_us`` — the planned executor with the raw kernel as a call
+  argument (re-packing traced into every call) — the load-time-vs-call-time
+  gap the plan/executor refactor removes.
+
+``main`` also emits machine-readable ``BENCH_fig7.json`` so CI tracks the
+perf trajectory; ``quick=True`` shrinks the timing loop for smoke runs.
 """
 from __future__ import annotations
 
 import functools
+import json
 
 import jax
 import jax.numpy as jnp
@@ -23,9 +34,10 @@ from repro.core.plan import ConvSpec, plan_conv
 from repro.models.gan import CGAN_LAYERS, DCGAN_LAYERS, deconv_padding
 
 BATCH = 1
+JSON_PATH = "BENCH_fig7.json"
 
 
-def bench_layer(l, backend="xla"):
+def bench_layer(l, backend="xla", iters=10, warmup=3):
     pad = deconv_padding(l.kernel, l.stride)
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (BATCH, l.in_hw, l.in_hw, l.in_c), jnp.float32)
@@ -45,6 +57,7 @@ def bench_layer(l, backend="xla"):
                                       kernel_hw=khw, strides=strides,
                                       padding=pad))
     planned = jax.jit(plan.apply)
+    per_phase = jax.jit(plan.apply_per_phase)
     unplanned = jax.jit(functools.partial(huge_conv_transpose2d,
                                           strides=strides, padding=pad))
     # correctness guard: every path matches the XLA oracle
@@ -52,30 +65,63 @@ def bench_layer(l, backend="xla"):
     want = ref.oracle_conv_transpose2d(x, k, strides=strides, padding=pad)
     np.testing.assert_allclose(np.asarray(planned(x, packed)),
                                np.asarray(want), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(per_phase(x, packed)),
+                               np.asarray(want), rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(np.asarray(naive(x, w_flat)),
                                np.asarray(want), rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(np.asarray(unplanned(x, k)),
                                np.asarray(want), rtol=2e-4, atol=2e-4)
-    t_naive = time_fn(naive, x, w_flat)
-    t_huge = time_fn(planned, x, packed)
-    t_unplanned = time_fn(unplanned, x, k)
-    return t_naive, t_huge, t_unplanned
+    return {
+        "path": plan.path,
+        "naive_us": time_fn(naive, x, w_flat, iters=iters, warmup=warmup) * 1e6,
+        "planned_us": time_fn(planned, x, packed, iters=iters,
+                              warmup=warmup) * 1e6,
+        "per_phase_us": time_fn(per_phase, x, packed, iters=iters,
+                                warmup=warmup) * 1e6,
+        "unplanned_us": time_fn(unplanned, x, k, iters=iters,
+                                warmup=warmup) * 1e6,
+    }
 
 
-def main(print_csv=True):
-    rows = []
+def main(print_csv=True, quick=False, json_path=JSON_PATH):
+    iters, warmup = (3, 1) if quick else (10, 3)
+    rows, records = [], []
     for gan, layers in (("DCGAN", DCGAN_LAYERS), ("cGAN", CGAN_LAYERS)):
         for i, l in enumerate(layers):
-            tn, th, tu = bench_layer(l)
-            rows.append(csv_row(f"fig7_{gan}_DC{i + 1}", th * 1e6,
-                                f"naive_us={tn * 1e6:.1f} "
-                                f"speedup={tn / th:.2f}x "
-                                f"unplanned_us={tu * 1e6:.1f} "
-                                f"plan_gain={tu / th:.2f}x"))
+            t = bench_layer(l, iters=iters, warmup=warmup)
+            rec = dict(name=f"fig7_{gan}_DC{i + 1}", gan=gan, layer=i + 1,
+                       in_hw=l.in_hw, in_c=l.in_c, out_c=l.out_c,
+                       kernel=l.kernel, stride=l.stride, **t)
+            rec["speedup_vs_naive"] = t["naive_us"] / t["planned_us"]
+            rec["fused_vs_per_phase"] = t["per_phase_us"] / t["planned_us"]
+            rec["plan_gain"] = t["unplanned_us"] / t["planned_us"]
+            records.append(rec)
+            rows.append(csv_row(
+                rec["name"], t["planned_us"],
+                f"naive_us={t['naive_us']:.1f} "
+                f"speedup={rec['speedup_vs_naive']:.2f}x "
+                f"per_phase_us={t['per_phase_us']:.1f} "
+                f"fused_vs_per_phase={rec['fused_vs_per_phase']:.2f}x "
+                f"path={t['path']} "
+                f"unplanned_us={t['unplanned_us']:.1f} "
+                f"plan_gain={rec['plan_gain']:.2f}x"))
+    dc = [r["fused_vs_per_phase"] for r in records if r["gan"] == "DCGAN"]
+    geomean = functools.reduce(lambda a, b: a * b, dc) ** (1.0 / len(dc))
+    payload = {
+        "bench": "fig7", "batch": BATCH, "quick": quick,
+        "backend": jax.default_backend(),
+        "layers": records,
+        "dcgan_geomean_fused_vs_per_phase": geomean,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
     if print_csv:
         for r in rows:
             print(r)
-    return rows
+        print(f"# dcgan_geomean_fused_vs_per_phase={geomean:.2f}x"
+              + (f" -> {json_path}" if json_path else ""))
+    return payload
 
 
 if __name__ == "__main__":

@@ -1,11 +1,19 @@
 """Paper Fig. 8 (left): memory-access reduction of HUGE2 vs the naive
-zero-insertion + im2col engine, per DCGAN / cGAN layer — analytic byte
-counts from the traffic model in core/reference.py (paper reports 30-70%)."""
+zero-insertion + im2col engine, per DCGAN / cGAN layer (paper reports
+30-70%).
+
+Routed through planned execution: each layer's ``ConvPlan`` is built and
+the analytic byte counts come from the actual plan geometry
+(``bytes_planned_transpose``) — the fused single-launch executor's one
+plane residency + one superpack stream + one interleaved output write —
+next to the naive-engine model and the PR-1 per-phase executor's traffic.
+"""
 from __future__ import annotations
 
 from benchmarks.util import csv_row
-from repro.core.reference import memory_reduction_transpose
-from repro.models.gan import CGAN_LAYERS, DCGAN_LAYERS
+from repro.core.plan import ConvSpec, plan_conv
+from repro.core.reference import bytes_naive_transpose, bytes_planned_transpose
+from repro.models.gan import CGAN_LAYERS, DCGAN_LAYERS, deconv_padding
 
 BATCH = 1
 
@@ -14,14 +22,23 @@ def main(print_csv=True):
     rows = []
     for gan, layers in (("DCGAN", DCGAN_LAYERS), ("cGAN", CGAN_LAYERS)):
         for i, l in enumerate(layers):
-            m = memory_reduction_transpose(
+            plan = plan_conv(ConvSpec(
+                kind="transposed", in_hw=(l.in_hw, l.in_hw), in_c=l.in_c,
+                out_c=l.out_c, kernel_hw=(l.kernel, l.kernel),
+                strides=(l.stride, l.stride),
+                padding=deconv_padding(l.kernel, l.stride)))
+            naive = bytes_naive_transpose(
                 BATCH, l.in_hw, l.in_hw, l.in_c, l.kernel, l.kernel, l.out_c,
                 l.stride)
+            m = bytes_planned_transpose(plan, b=BATCH)
             rows.append(csv_row(
                 f"fig8_mem_{gan}_DC{i + 1}", 0.0,
-                f"naive_bytes={int(m['naive_bytes'])} "
-                f"huge_bytes={int(m['huge_bytes'])} "
-                f"reduction={m['reduction'] * 100:.1f}%"))
+                f"naive_bytes={int(naive)} "
+                f"fused_bytes={int(m['fused_bytes'])} "
+                f"per_phase_bytes={int(m['per_phase_bytes'])} "
+                f"reduction={(1 - m['fused_bytes'] / naive) * 100:.1f}% "
+                f"fused_vs_per_phase="
+                f"{(1 - m['fused_bytes'] / m['per_phase_bytes']) * 100:.1f}%"))
     if print_csv:
         for r in rows:
             print(r)

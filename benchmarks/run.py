@@ -1,7 +1,15 @@
 """Benchmark harness: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  Run:
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+Prints ``name,us_per_call,derived`` CSV and writes machine-readable
+``BENCH_fig7.json`` (per-layer planned/naive/per-phase µs + the
+fused-vs-per-phase speedup of the single-launch executor) so the perf
+trajectory is tracked run over run.  Run:
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
+
+``--quick`` keeps the oracle-checked Fig.-7 wall-clock (with a short timing
+loop) so CI smoke still produces the JSON, and skips the remaining slow
+benches.
 """
 from __future__ import annotations
 
@@ -11,18 +19,20 @@ import argparse
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="skip the slow wall-clock benches")
+                    help="short timing loops; skip the slowest benches")
+    ap.add_argument("--json", default="BENCH_fig7.json",
+                    help="where to write the fig7 JSON ('' disables)")
     args = ap.parse_args()
 
-    from benchmarks import table1_layers, fig8_memory
+    from benchmarks import fig7_speedup, fig8_memory, table1_layers
     print("# paper Table 1 — layer configs + MAC reduction")
-    table1_layers.main()
-    print("# paper Fig 8 (left) — memory-access reduction (analytic bytes)")
+    table1_layers.main(walltime=not args.quick)
+    print("# paper Fig 8 (left) — memory-access reduction (plan-derived bytes)")
     fig8_memory.main()
+    print("# paper Fig 7 — inference speedup vs naive engine (CPU wall-clock)")
+    fig7_speedup.main(quick=args.quick, json_path=args.json or None)
     if not args.quick:
-        from benchmarks import dilated_conv, fig7_speedup, fig8_training
-        print("# paper Fig 7 — inference speedup vs naive engine (CPU wall-clock)")
-        fig7_speedup.main()
+        from benchmarks import dilated_conv, fig8_training
         print("# paper Fig 8 (right) — GAN training speedup (engine VJPs)")
         fig8_training.main()
         print("# paper §3.2.2 — dilated (atrous) conv, untangled vs naive")

@@ -8,7 +8,13 @@ import numpy as np
 
 
 def time_fn(fn, *args, iters: int = 10, warmup: int = 3) -> float:
-    """Median wall-time (seconds) of a jitted callable."""
+    """Best (min) wall-time in seconds of a jitted callable.
+
+    Min-of-N is the noise-robust latency statistic on shared hosts: every
+    source of interference (scheduler preemption, turbo/thermal shifts,
+    co-tenant load) only ever adds time, so the minimum is the closest
+    observable to the uncontended cost being compared.
+    """
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -16,7 +22,7 @@ def time_fn(fn, *args, iters: int = 10, warmup: int = 3) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return float(np.min(ts))
 
 
 def csv_row(name: str, us: float, derived: str = "") -> str:

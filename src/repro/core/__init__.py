@@ -1,6 +1,7 @@
 """HUGE² core: phase decomposition + untangling, planned once per site."""
 from repro.core.decompose import (decompose_kernel, interleave_phases,
-                                  plan_phases_1d, transposed_out_size)
+                                  interleave_uniform, plan_phases_1d,
+                                  transposed_out_size)
 from repro.core.engine import (huge_conv2d, huge_conv_transpose2d,
                                huge_dilated_conv2d)
 from repro.core.plan import (ConvPlan, ConvSpec, conv_spec, plan_cache_clear,
@@ -9,7 +10,8 @@ from repro.core.untangle import (untangled_conv2d, untangled_depthwise_conv1d)
 from repro.core import reference
 
 __all__ = [
-    "decompose_kernel", "interleave_phases", "plan_phases_1d",
+    "decompose_kernel", "interleave_phases", "interleave_uniform",
+    "plan_phases_1d",
     "transposed_out_size", "huge_conv2d", "huge_conv_transpose2d",
     "huge_dilated_conv2d", "untangled_conv2d", "untangled_depthwise_conv1d",
     "ConvPlan", "ConvSpec", "conv_spec", "plan_conv", "plan_cache_info",

@@ -104,6 +104,24 @@ def decompose_kernel(kernel: jax.Array, strides: Sequence[int],
     return subs
 
 
+def interleave_uniform(phase_outputs: Sequence[jax.Array],
+                       strides: Sequence[int], out_hw: Pair) -> jax.Array:
+    """Interleave uniform-extent phase outputs (phase-ordered list, q_h-major)
+    with a single stack + transpose + reshape — the one layout transform the
+    fused single-launch executors emit after their wide GEMM.
+
+    Requires every phase output to share (U, V) with ``U*s_h == out_h`` and
+    ``V*s_w == out_w`` (guaranteed by ``ConvPlan.uniform``).
+    """
+    (sh, sw) = strides
+    oh, ow = out_hw
+    b = phase_outputs[0].shape[0]
+    n = phase_outputs[0].shape[-1]
+    u, v = phase_outputs[0].shape[-3], phase_outputs[0].shape[-2]
+    y = jnp.stack(phase_outputs, axis=0).reshape(sh, sw, b, u, v, n)
+    return y.transpose(2, 3, 0, 4, 1, 5).reshape(b, oh, ow, n)
+
+
 def interleave_phases(phase_outputs: dict[Pair, jax.Array],
                       strides: Sequence[int], out_hw: Pair) -> jax.Array:
     """Interleave per-phase outputs O[.., s_h*u+q_h, s_w*v+q_w, :] = y_q[.., u, v, :].

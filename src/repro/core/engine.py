@@ -89,8 +89,10 @@ def huge_conv_transpose2d_pre(x, pre_subs, kernel_hw, strides=(2, 2),
                               padding=((2, 2), (2, 2))):
     """Transposed conv with offline-decomposed weights (legacy entry).
 
-    Adapts the tuple-keyed ``pre_subs`` onto the planned executor — the
-    execution itself is ``ConvPlan.apply``, not a separate code path.
+    Adapts the tuple-keyed per-phase ``pre_subs`` onto the planned executor:
+    ``ConvPlan.as_superpack`` concatenates the phase buffers into the
+    superpacked layout at the plan's row offsets, then execution is
+    ``ConvPlan.apply`` — not a separate code path.
     """
     n = max(sub.shape[-1] for sub in pre_subs.values())
     spec = conv_spec("transposed", x.shape,
@@ -98,5 +100,4 @@ def huge_conv_transpose2d_pre(x, pre_subs, kernel_hw, strides=(2, 2),
                      strides=strides, padding=padding, dtype=x.dtype,
                      backend="xla")
     plan = plan_conv(spec)
-    packed = {ex.key: pre_subs[ex.q] for ex in plan.phases}
-    return plan.apply(x, packed)
+    return plan.apply(x, plan.as_superpack(pre_subs))

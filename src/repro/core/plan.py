@@ -1,4 +1,5 @@
-"""Plan/executor engine: every HUGE² conv is *planned once* at model-load.
+"""Plan/executor engine: every HUGE² conv is *planned once* at model-load,
+and every transposed conv *executes as one launch*.
 
 The paper's central claim is that transposed / strided / dilated convolutions
 should be decomposed **offline** and executed as zero-free GEMMs with maximal
@@ -8,21 +9,46 @@ data reuse.  This module is that offline step made explicit:
   spatial/channel shapes, strides, padding, dilation, dtype, backend policy).
 - ``plan_conv``  — compiles a spec into a ``ConvPlan`` exactly once (keyed
   LRU cache); everything the old engine recomputed inside every jitted call
-  is captured here: per-phase ``PhasePlan1D`` geometry, the execution path
-  per phase (Pallas whole-plane / XLA fused-taps / XLA per-tap GEMMs, with
-  VMEM tile sizes chosen at plan time), and the mirrored backward schedules.
-- ``ConvPlan.pack``    — slices the HWIO kernel into GEMM-ready per-phase
-  sub-kernels, flattened tap-major to ``(T_h*T_w*C, N)``.  Done once at
-  model load; the packed buffers *are* the model's parameters from then on.
-- ``ConvPlan.apply``   — executes the planned convolution on packed weights.
-  For the transposed and strided kinds this is a ``jax.custom_vjp`` whose
-  backward also runs on the packed layout:
+  is captured here: per-phase ``PhasePlan1D`` geometry, the *whole-conv*
+  execution path (one fused Pallas launch / one wide XLA GEMM / per-phase
+  GEMM fallback, with VMEM tile sizes chosen at plan time), and the mirrored
+  backward schedules.
+- ``ConvPlan.pack``    — slices the HWIO kernel into the **superpacked**
+  weight layout: all phase sub-kernels concatenated into a single tap-major
+  buffer ``(Σ_q T_h·T_w·C, N)``.  Row offsets into it are plan-time
+  constants (``PhaseExec.tap_off``).  Done once at model load; the superpack
+  *is* the model's parameter from then on.
+- ``ConvPlan.apply``   — executes the planned convolution on the superpack.
 
-  * dx of a transposed conv — the §3.2.3 *strided-conv* form: per-tap GEMMs
-    of the padded derivative maps against panels fetched straight out of the
-    packed phase buffers (no kernel reassembly, no zeros).
-  * dK of a transposed conv — the §3.2.3 *dilated-kernel* form, emitted
-    directly in the packed per-phase layout.
+Single-launch transposed execution (EcoFlow-style fusion of all s_h·s_w
+phases over one residency of the input):
+
+* ``pallas``      — one multi-phase Pallas kernel: the globally padded plane
+  resident in VMEM once, a static unrolled loop over every phase's taps
+  accumulating into per-phase f32 scratch, and a flush that writes the
+  *interleaved* output block directly with strided in-kernel stores.
+* ``fused_tap``   — one wide XLA GEMM: all tap-shifted views of the resident
+  plane stacked against the superpack reshaped ``(ΣT, C, N)``, per-phase
+  tap-segment sums, one reshape-interleave.  Exact FLOPs; wins when the
+  plane is small relative to the phase output (DCGAN head layers).
+* ``fused_plane`` — one wide XLA GEMM of the whole padded plane against the
+  superpack viewed as ``(C, ΣT·N)``; every tap's contribution for every
+  position comes out of the single GEMM, then shifted slice-accumulate and
+  one reshape-interleave.  Slight FLOP overhead ``Hg·Wg·ΣT / Σ u·v·T``;
+  wins when that ratio is small (deep layers, big planes).
+* ``taps``        — general fallback (non-uniform phase extents with a large
+  plane ratio): still a *single* global pad — per-phase GEMMs read the one
+  resident plane through plan-time offsets — but phases are separate GEMMs
+  and the output goes through ``interleave_phases``.
+
+For the transposed and strided kinds ``apply`` is a ``jax.custom_vjp`` whose
+backward also runs on the superpacked layout:
+
+* dx of a transposed conv — the §3.2.3 *strided-conv* form: per-tap GEMMs
+  of the padded derivative maps against ``(C, N)`` panels fetched straight
+  out of the superpack at plan-time row offsets (no kernel reassembly).
+* dK of a transposed conv — the §3.2.3 *dilated-kernel* form, emitted
+  directly in superpack order.
 
 No other module slices kernels at execution time; ``repro.core.engine`` and
 ``repro.kernels.ops`` are thin dispatchers over this cache.
@@ -45,9 +71,19 @@ Pair = tuple[int, int]
 # leave headroom below the 16 MiB/core VMEM of v5e (moved from kernels.ops)
 _VMEM_BUDGET = 12 * 1024 * 1024
 
-# plan-time fuse heuristic: concatenate tap views + one wide GEMM when the
-# GEMM has too few rows to amortize per-tap dispatch (paper Fig. 7 DC1).
+# plan-time fuse heuristic for the per-phase fallback and plain convs:
+# concatenate tap views + one wide GEMM when the GEMM has too few rows to
+# amortize per-tap dispatch (paper Fig. 7 DC1).
 _FUSE_MAX_ROWS = 128
+
+# whole-conv XLA path heuristic: the plane GEMM computes
+# Hg*Wg*ΣT*C*N MACs where Σ u·v·T_q*C*N would be exact; take the plane
+# GEMM when the overhead ratio is below this, else the exact tap-stacked
+# GEMM (uniform phases) or the per-phase fallback.
+_PLANE_RATIO_MAX = 1.6
+# cap the (B=1) f32 plane-GEMM intermediate (Hg*Wg*ΣT*N) — beyond this the
+# im2col-like blowup stops being an edge-memory win.
+_PLANE_BYTES_MAX = 64 * 1024 * 1024
 
 
 def norm_padding(padding, k_hw) -> tuple[Pair, Pair]:
@@ -82,6 +118,22 @@ def pick_vmem_tiles(hp, wp, c, n, r, s, oh, ow, itemsize):
                 continue
             if vmem_bytes_estimate(hp, wp, min(c_t, c), r, s, min(n_t, n),
                                    oh, ow, itemsize) <= _VMEM_BUDGET:
+                return min(c_t, c), min(n_t, n)
+    return None
+
+
+def pick_fused_tiles(hg, wg, c, n, total_taps, sum_uv, oh, ow, itemsize):
+    """(C_t, N_t) for the multi-phase fused kernel: the working set is the
+    whole global plane + the superpack tile + per-phase f32 scratch + the
+    full interleaved output block."""
+    from repro.kernels.untangled_conv import vmem_bytes_estimate_fused
+    for n_t in (256, 128, 64, 32, 16, 8):
+        for c_t in (256, 128, 64, 32, 16, 8):
+            if c_t > max(c, 8) * 2 or n_t > max(n, 8) * 2:
+                continue
+            if vmem_bytes_estimate_fused(
+                    hg, wg, min(c_t, c), total_taps, min(n_t, n), sum_uv,
+                    oh, ow, itemsize) <= _VMEM_BUDGET:
                 return min(c_t, c), min(n_t, n)
     return None
 
@@ -129,20 +181,28 @@ def conv_spec(kind: str, x_shape: Sequence[int], kernel_shape: Sequence[int],
 
 @dataclasses.dataclass(frozen=True)
 class PhaseExec:
-    """Plan-time execution record for one output phase (or the whole conv)."""
+    """Plan-time geometry record for one output phase (or the whole conv).
 
-    key: str                      # packed-weights pytree key
+    Offsets are superpack / fused-kernel coordinates, fixed at plan time:
+    ``tap_off`` rows (in taps) into the superpacked weight buffer,
+    ``acc_off`` rows (in output pixels) into the fused kernel's accumulator,
+    ``xoff`` the phase's tap origin inside the globally padded plane.
+    """
+
+    key: str                      # legacy per-phase pytree key (checkpoints)
     q: Pair                       # (q_h, q_w) output phase
     rho: Pair                     # first kernel tap per dim
     taps: Pair                    # (T_h, T_w) sub-kernel extent
     pad: tuple[Pair, Pair]        # input pad/crop for this phase's stride-1 conv
     out_hw: Pair                  # (U, V) phase output extent
-    path: str                     # 'zeros' | 'fused' | 'taps' | 'pallas'
-    tiles: Pair | None            # (C_t, N_t) when path == 'pallas'
+    tap_off: int = 0              # taps preceding this phase in the superpack
+    acc_off: int = 0              # U·V rows preceding this phase in scratch
+    xoff: Pair = (0, 0)           # tap origin in the globally padded plane
 
 
 def _choose_path(backend: str, hp: int, wp: int, c: int, n: int,
                  taps: Pair, out_hw: Pair, itemsize: int) -> tuple[str, Pair | None]:
+    """Single-correlation path choice ('conv' / 'dilated' kinds)."""
     th, tw = taps
     u, v = out_hw
     if th == 0 or tw == 0 or u == 0 or v == 0:
@@ -158,6 +218,30 @@ def _choose_path(backend: str, hp: int, wp: int, c: int, n: int,
     return "taps", None
 
 
+def _choose_transposed_path(spec: ConvSpec, hg: int, wg: int, out_hw: Pair,
+                            total_taps: int, sum_uv: int, sum_uvt: int,
+                            uniform: bool, itemsize: int):
+    """Whole-conv path for the transposed kind: one launch / one wide GEMM."""
+    c, n = spec.in_c, spec.out_c
+    oh, ow = out_hw
+    if total_taps == 0:
+        return "taps", None        # every phase is empty; executor emits zeros
+    want_pallas = spec.backend == "pallas" or (
+        spec.backend == "auto" and jax.default_backend() == "tpu")
+    if want_pallas:
+        tiles = pick_fused_tiles(hg, wg, c, n, total_taps, sum_uv, oh, ow,
+                                 itemsize)
+        if tiles is not None:
+            return "pallas", tiles
+    plane_ratio = hg * wg * total_taps / max(1, sum_uvt)
+    plane_bytes = 4 * hg * wg * total_taps * n
+    if plane_ratio <= _PLANE_RATIO_MAX and plane_bytes <= _PLANE_BYTES_MAX:
+        return "fused_plane", None
+    if uniform:
+        return "fused_tap", None
+    return "taps", None
+
+
 # ---------------------------------------------------------------------------
 # plan
 # ---------------------------------------------------------------------------
@@ -170,8 +254,14 @@ class ConvPlan:
     spec: ConvSpec
     out_hw: Pair
     phases: tuple[PhaseExec, ...]          # len 1 for 'conv'/'dilated'
+    path: str                              # whole-conv execution path
+    tiles: Pair | None                     # (C_t, N_t) when path == 'pallas'
+    gpad: tuple[Pair, Pair] | None         # transposed: single global input pad
+    total_taps: int                        # Σ_q T_h·T_w (superpack rows / C)
+    sum_uv: int                            # Σ_q U·V (fused accumulator rows)
+    uniform: bool                          # all phases share (U, V)
     bwd_pad: tuple[Pair, Pair] | None      # transposed: dy padding for dx/dK
-    dx_taps: tuple[tuple, ...] | None      # transposed: (m, n, key, flat_row)
+    dx_taps: tuple[tuple, ...] | None      # transposed: (m, n, superpack row)
     conv_bwd: "ConvPlan | None"            # conv: child transposed plan for dx
     build_ms: float = 0.0
 
@@ -179,37 +269,62 @@ class ConvPlan:
     def pack(self, kernel: jax.Array):
         """Kernel (R,S,C,N) -> packed GEMM-ready weights.
 
-        'transposed': {key: (T_h*T_w*C, N)} tap-major flattened phase
-        sub-kernels.  'conv'/'dilated': the kernel itself (identity pack —
-        untangling reads taps in place, there is nothing to pre-slice).
+        'transposed': the **superpack** ``(Σ_q T_h·T_w·C, N)`` — all phase
+        sub-kernels flattened tap-major and concatenated in phase order
+        (row offsets are plan-time constants).  'conv'/'dilated': the kernel
+        itself (identity pack — untangling reads taps in place, there is
+        nothing to pre-slice).
         """
         if self.spec.kind != "transposed":
             return kernel
         subs = dec.decompose_kernel(kernel, self.spec.strides,
                                     self.spec.padding)
-        packed = {}
+        c, n = self.spec.in_c, self.spec.out_c
+        segs = []
         for ex in self.phases:
-            sub = subs[ex.q]
             th, tw = ex.taps
-            packed[ex.key] = sub.reshape(th * tw * self.spec.in_c,
-                                         self.spec.out_c)
-        return packed
+            if th * tw == 0:
+                continue
+            segs.append(subs[ex.q].reshape(th * tw * c, n))
+        if not segs:
+            return jnp.zeros((0, n), kernel.dtype)
+        return jnp.concatenate(segs, axis=0)
+
+    def as_superpack(self, packed):
+        """Adapt legacy per-phase dicts ({'q0x1': buf} or {(0,1): buf}) onto
+        the superpacked layout; superpack arrays pass through unchanged.
+        Kept so pre-superpack checkpoints load without conversion."""
+        if not isinstance(packed, dict):
+            return packed
+        segs = []
+        for ex in self.phases:
+            if ex.taps[0] * ex.taps[1] == 0:
+                continue
+            sub = packed[ex.key] if ex.key in packed else packed[ex.q]
+            segs.append(sub.reshape(-1, self.spec.out_c))
+        if not segs:
+            return jnp.zeros((0, self.spec.out_c), self.spec.dtype)
+        return jnp.concatenate(segs, axis=0)
 
     def unpack(self, packed):
-        """Packed weights -> full (R,S,C,N) kernel (offline use only)."""
+        """Packed weights -> full (R,S,C,N) kernel (offline use only).
+        Accepts the superpack or a legacy per-phase dict; round-trips
+        ``pack`` exactly, so checkpoints survive the layout migration."""
         if self.spec.kind != "transposed":
             return packed
+        packed = self.as_superpack(packed)
         r, s = self.spec.kernel_hw
         c, n = self.spec.in_c, self.spec.out_c
         (sh, sw) = self.spec.strides
-        sample = next(iter(packed.values()))
-        kernel = jnp.zeros((r, s, c, n), sample.dtype)
+        kernel = jnp.zeros((r, s, c, n), packed.dtype)
         for ex in self.phases:
             th, tw = ex.taps
-            if th == 0 or tw == 0:
+            if th * tw == 0:
                 continue
-            sub = packed[ex.key].reshape(th, tw, c, n)
-            kernel = kernel.at[ex.rho[0]::sh, ex.rho[1]::sw].set(sub)
+            sub = jax.lax.slice(packed, [ex.tap_off * c, 0],
+                                [(ex.tap_off + th * tw) * c, n])
+            kernel = kernel.at[ex.rho[0]::sh, ex.rho[1]::sw].set(
+                sub.reshape(th, tw, c, n))
         return kernel
 
     # -- execution ---------------------------------------------------------
@@ -222,7 +337,7 @@ class ConvPlan:
                 f"{self.spec.in_hw + (self.spec.in_c,)} — plans bake geometry "
                 f"at build time; plan_conv a spec for this shape")
         if self.spec.kind == "transposed":
-            return _planned_transposed(self, x, packed)
+            return _planned_transposed(self, x, self.as_superpack(packed))
         if self.spec.kind == "conv":
             return _planned_conv(self, x, packed)
         return _dilated_fwd(self, x, packed)       # autodiff through slices
@@ -233,6 +348,15 @@ class ConvPlan:
         """Compatibility path: pack per call, then execute.  Under jit this
         re-slices the kernel every invocation — serve from ``pack`` instead."""
         return self.apply(x, self.pack(kernel))
+
+    def apply_per_phase(self, x: jax.Array, packed) -> jax.Array:
+        """The pre-fusion per-phase executor (one pad + GEMM chain per phase,
+        stack/transpose interleave).  Kept as the measurement baseline for
+        the fused single-launch path and as a parity oracle in tests; not
+        differentiable through the custom VJP."""
+        if self.spec.kind != "transposed":
+            return self.apply(x, packed)
+        return _transposed_per_phase(self, x, self.as_superpack(packed))
 
 
 @functools.lru_cache(maxsize=4096)
@@ -255,23 +379,37 @@ def plan_conv(spec: ConvSpec) -> ConvPlan:
         plans_w = dec.plan_phases_1d(w, s, sw, pw)
         oh = dec.transposed_out_size(h, r, sh, ph)
         ow = dec.transposed_out_size(w, s, sw, pw)
+        # single global pad: one residency of the input serves every phase
+        # (phase tap origins become plan-time offsets into the padded plane)
+        gl_h = max(0, max(p.pad[0] for p in plans_h))
+        gh_h = max(0, max(p.pad[1] for p in plans_h))
+        gl_w = max(0, max(p.pad[0] for p in plans_w))
+        gh_w = max(0, max(p.pad[1] for p in plans_w))
+        gpad = ((gl_h, gh_h), (gl_w, gh_w))
+        hg, wg = h + gl_h + gh_h, w + gl_w + gh_w
         phases = []
+        tap_off = acc_off = sum_uvt = 0
         for p_h in plans_h:
             for p_w in plans_w:
                 taps = (p_h.taps, p_w.taps)
                 out_hw = (p_h.out_size, p_w.out_size)
-                hp = h + p_h.pad[0] + p_h.pad[1]
-                wp = w + p_w.pad[0] + p_w.pad[1]
-                path, tiles = _choose_path(spec.backend, hp, wp, c, n,
-                                           taps, out_hw, itemsize)
                 phases.append(PhaseExec(
                     key=f"q{p_h.phase}x{p_w.phase}", q=(p_h.phase, p_w.phase),
                     rho=(p_h.rho, p_w.rho), taps=taps,
                     pad=(p_h.pad, p_w.pad), out_hw=out_hw,
-                    path=path, tiles=tiles))
+                    tap_off=tap_off, acc_off=acc_off,
+                    xoff=(gl_h - p_h.pad[0], gl_w - p_w.pad[0])))
+                tap_off += taps[0] * taps[1]
+                acc_off += out_hw[0] * out_hw[1]
+                sum_uvt += out_hw[0] * out_hw[1] * taps[0] * taps[1]
+        total_taps, sum_uv = tap_off, acc_off
+        uniform = len({ex.out_hw for ex in phases}) == 1
+        path, tiles = _choose_transposed_path(
+            spec, hg, wg, (oh, ow), total_taps, sum_uv, sum_uvt, uniform,
+            itemsize)
         # dx schedule (strided-conv form): tap (m, n) of the flipped/swapped
         # kernel reads full-kernel tap (r-1-m, s-1-n), which lives in phase
-        # ((pl-r') % s) at flat row r'//s within the packed buffer.
+        # ((pl-r') % s) at superpack row tap_off + r'//s (tap units).
         by_q = {ex.q: ex for ex in phases}
         dx_taps = []
         for m in range(r):
@@ -279,11 +417,13 @@ def plan_conv(spec: ConvSpec) -> ConvPlan:
                 rp, sp = r - 1 - m, s - 1 - nn
                 qh, qw = (ph[0] - rp) % sh, (pw[0] - sp) % sw
                 ex = by_q[(qh, qw)]
-                row = (rp // sh) * ex.taps[1] + (sp // sw)
-                dx_taps.append((m, nn, ex.key, row))
+                row = ex.tap_off + (rp // sh) * ex.taps[1] + (sp // sw)
+                dx_taps.append((m, nn, row))
         bwd_pad = ((r - 1 - ph[0], r - 1 - ph[1]),
                    (s - 1 - pw[0], s - 1 - pw[1]))
         plan = ConvPlan(spec=spec, out_hw=(oh, ow), phases=tuple(phases),
+                        path=path, tiles=tiles, gpad=gpad,
+                        total_taps=total_taps, sum_uv=sum_uv, uniform=uniform,
                         bwd_pad=bwd_pad, dx_taps=tuple(dx_taps),
                         conv_bwd=None)
 
@@ -297,8 +437,7 @@ def plan_conv(spec: ConvSpec) -> ConvPlan:
         path, tiles = _choose_path(spec.backend, hp, wp, c, n, (r, s),
                                    (oh, ow), itemsize)
         ex = PhaseExec(key="k", q=(0, 0), rho=(0, 0), taps=(r, s),
-                       pad=spec.padding, out_hw=(oh, ow), path=path,
-                       tiles=tiles)
+                       pad=spec.padding, out_hw=(oh, ow))
         conv_bwd = None
         if spec.kind == "conv":
             # mirrored dx plan: transposed conv of dy with the flipped/swapped
@@ -315,6 +454,8 @@ def plan_conv(spec: ConvSpec) -> ConvPlan:
                          (s - 1 - pw[0], s - 1 - pw[1] + def_w)),
                 dtype=spec.dtype, backend="xla"))
         plan = ConvPlan(spec=spec, out_hw=(oh, ow), phases=(ex,),
+                        path=path, tiles=tiles, gpad=None,
+                        total_taps=r * s, sum_uv=oh * ow, uniform=True,
                         bwd_pad=None, dx_taps=None, conv_bwd=conv_bwd)
     else:
         raise ValueError(f"unknown conv kind {spec.kind!r}")
@@ -335,12 +476,13 @@ def plan_cache_clear():
 # executors (all geometry is plan-time constant)
 # ---------------------------------------------------------------------------
 
-def _exec_phase(xp: jax.Array, sub4: jax.Array, ex: PhaseExec, strides: Pair,
-                dilation: Pair, out_dtype, interpret=None) -> jax.Array:
+def _exec_phase(xp: jax.Array, sub4: jax.Array, path: str, tiles: Pair | None,
+                taps: Pair, out_hw: Pair, strides: Pair, dilation: Pair,
+                out_dtype, interpret=None) -> jax.Array:
     """One planned stride/dilation correlation of pre-padded ``xp`` with the
     4-D sub-kernel, along the path chosen at plan time."""
-    th, tw = ex.taps
-    u, v = ex.out_hw
+    th, tw = taps
+    u, v = out_hw
     (sh, sw), (dh, dw) = strides, dilation
     cc = xp.shape[-1]
 
@@ -351,16 +493,16 @@ def _exec_phase(xp: jax.Array, sub4: jax.Array, ex: PhaseExec, strides: Pair,
                                    nn * dw + (v - 1) * sw + 1, cc],
             [1] * (xp.ndim - 3) + [sh, sw, 1])
 
-    if ex.path == "pallas":
+    if path == "pallas":
         from repro.kernels.untangled_conv import untangled_conv2d_pallas
         lead = xp.shape[:-3]
         xp4 = xp.reshape((-1,) + xp.shape[-3:])
         y = untangled_conv2d_pallas(xp4, sub4, strides=strides,
                                     rhs_dilation=dilation,
-                                    c_tile=ex.tiles[0], n_tile=ex.tiles[1],
+                                    c_tile=tiles[0], n_tile=tiles[1],
                                     out_dtype=out_dtype, interpret=interpret)
         return y.reshape(lead + y.shape[1:])
-    if ex.path == "fused":
+    if path == "fused":
         buf = jnp.concatenate([tap_view(m, nn) for m in range(th)
                                for nn in range(tw)], axis=-1)
         w2 = sub4.reshape(th * tw * cc, sub4.shape[-1])
@@ -378,39 +520,197 @@ def _exec_phase(xp: jax.Array, sub4: jax.Array, ex: PhaseExec, strides: Pair,
     return acc.astype(out_dtype)
 
 
-def _transposed_fwd(plan: ConvPlan, x, packed, interpret=None):
+# -- transposed: fused single-launch executors ------------------------------
+
+def _global_plane(plan: ConvPlan, x4: jax.Array) -> jax.Array:
+    (glh, ghh), (glw, ghw) = plan.gpad
+    if glh or ghh or glw or ghw:
+        return jnp.pad(x4, ((0, 0), (glh, ghh), (glw, ghw), (0, 0)))
+    return x4
+
+
+def _phase_tap_view(xg: jax.Array, ex: PhaseExec, ti: int, tj: int):
+    u, v = ex.out_hw
+    return jax.lax.slice(
+        xg, [0, ex.xoff[0] + ti, ex.xoff[1] + tj, 0],
+        [xg.shape[0], ex.xoff[0] + ti + u, ex.xoff[1] + tj + v, xg.shape[3]])
+
+
+def _fused_tap_fwd(plan: ConvPlan, xg: jax.Array, packed: jax.Array):
+    """One wide GEMM, exact FLOPs: every tap view of every phase stacked
+    against the superpack (ΣT, C, N), then per-phase tap-segment sums."""
     spec = plan.spec
     c, n = spec.in_c, spec.out_c
+    b = xg.shape[0]
+    views = []
+    for ex in plan.phases:
+        th, tw = ex.taps
+        for t in range(th * tw):
+            views.append(_phase_tap_view(xg, ex, *divmod(t, tw)))
+    buf = jnp.stack(views, axis=0)                     # (ΣT, B, U, V, C)
+    w3 = packed.reshape(plan.total_taps, c, n)
+    yt = jax.lax.dot_general(buf, w3, (((4,), (1,)), ((0,), (0,))),
+                             preferred_element_type=jnp.float32)
+    outs = []
+    for ex in plan.phases:
+        th, tw = ex.taps
+        u, v = ex.out_hw
+        if th * tw == 0:
+            outs.append(jnp.zeros((b, u, v, n), jnp.float32))
+            continue
+        outs.append(yt[ex.tap_off:ex.tap_off + th * tw].sum(axis=0))
+    return outs
+
+
+def _fused_plane_fwd(plan: ConvPlan, xg: jax.Array, packed: jax.Array):
+    """One wide GEMM of the whole resident plane against the superpack viewed
+    (C, ΣT·N); per-phase shifted slice-accumulate reads the tap planes."""
+    spec = plan.spec
+    c, n = spec.in_c, spec.out_c
+    b, hg, wg, _ = xg.shape
+    w2 = packed.reshape(plan.total_taps, c, n).transpose(1, 0, 2) \
+        .reshape(c, plan.total_taps * n)
+    yf = jax.lax.dot_general(xg.reshape(b * hg * wg, c), w2,
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    yf = yf.reshape(b, hg, wg, plan.total_taps, n)
+    outs = []
+    for ex in plan.phases:
+        th, tw = ex.taps
+        u, v = ex.out_hw
+        if th * tw == 0 or u == 0 or v == 0:
+            outs.append(jnp.zeros((b, u, v, n), jnp.float32))
+            continue
+        acc = None
+        for t in range(th * tw):
+            ti, tj = divmod(t, tw)
+            sl = jax.lax.slice(
+                yf, [0, ex.xoff[0] + ti, ex.xoff[1] + tj, ex.tap_off + t, 0],
+                [b, ex.xoff[0] + ti + u, ex.xoff[1] + tj + v,
+                 ex.tap_off + t + 1, n])[..., 0, :]
+            acc = sl if acc is None else acc + sl
+        outs.append(acc)
+    return outs
+
+
+def _taps_fallback_fwd(plan: ConvPlan, xg: jax.Array, packed: jax.Array):
+    """General fallback: still one global pad (phases read the single
+    resident plane through plan-time offsets), but per-phase GEMMs."""
+    spec = plan.spec
+    c, n = spec.in_c, spec.out_c
+    b = xg.shape[0]
     outs = {}
     for ex in plan.phases:
-        if ex.path == "zeros":
-            outs[ex.q] = jnp.zeros(
-                (*x.shape[:-3], ex.out_hw[0], ex.out_hw[1], n), x.dtype)
-            continue
         th, tw = ex.taps
-        sub4 = packed[ex.key].reshape(th, tw, c, n)
+        u, v = ex.out_hw
+        if th * tw == 0 or u == 0 or v == 0:
+            outs[ex.q] = jnp.zeros((b, u, v, n), xg.dtype)
+            continue
+        seg = jax.lax.slice(packed, [ex.tap_off * c, 0],
+                            [(ex.tap_off + th * tw) * c, n])
+        if u * v <= _FUSE_MAX_ROWS and th * tw > 2:
+            buf = jnp.concatenate(
+                [_phase_tap_view(xg, ex, *divmod(t, tw))
+                 for t in range(th * tw)], axis=-1)
+            acc = jax.lax.dot_general(buf, seg, (((3,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+        else:
+            acc = None
+            for t in range(th * tw):
+                xs = _phase_tap_view(xg, ex, *divmod(t, tw))
+                wt = jax.lax.slice(packed, [(ex.tap_off + t) * c, 0],
+                                   [(ex.tap_off + t + 1) * c, n])
+                term = jax.lax.dot_general(
+                    xs, wt, (((3,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                acc = term if acc is None else acc + term
+        outs[ex.q] = acc.astype(xg.dtype)
+    return dec.interleave_phases(outs, spec.strides, plan.out_hw)
+
+
+def _transposed_fwd(plan: ConvPlan, x, packed, interpret=None):
+    spec = plan.spec
+    lead = x.shape[:-3]
+    x4 = x.reshape((-1,) + x.shape[-3:])
+    b = x4.shape[0]
+    if plan.total_taps == 0:
+        y = jnp.zeros((b, *plan.out_hw, spec.out_c), x.dtype)
+        return y.reshape(lead + y.shape[1:])
+    xg = _global_plane(plan, x4)
+    path = plan.path
+    if path == "fused_plane":
+        # the plan-time _PLANE_BYTES_MAX cap assumed B=1 (ConvSpec carries no
+        # batch); re-check against the traced batch so a large-batch call
+        # cannot materialize a b-times-bigger plane-GEMM intermediate
+        _, hg, wg, _ = xg.shape
+        if (4 * b * hg * wg * plan.total_taps * spec.out_c
+                > _PLANE_BYTES_MAX):
+            path = "fused_tap" if plan.uniform else "taps"
+    if path == "pallas":
+        from repro.kernels.untangled_conv import untangled_deconv2d_pallas
+        y = untangled_deconv2d_pallas(
+            xg, packed, phases=plan.phases, out_hw=plan.out_hw,
+            strides=spec.strides, sum_uv=plan.sum_uv,
+            c_tile=plan.tiles[0], n_tile=plan.tiles[1],
+            out_dtype=x.dtype, interpret=interpret)
+    elif path in ("fused_tap", "fused_plane"):
+        fwd = _fused_tap_fwd if path == "fused_tap" else _fused_plane_fwd
+        outs = fwd(plan, xg, packed)
+        y = dec.interleave_uniform(outs, spec.strides, plan.out_hw) \
+            .astype(x.dtype) if plan.uniform else dec.interleave_phases(
+                {ex.q: o.astype(x.dtype)
+                 for ex, o in zip(plan.phases, outs)},
+                spec.strides, plan.out_hw)
+    else:
+        y = _taps_fallback_fwd(plan, xg, packed)
+    return y.reshape(lead + y.shape[1:])
+
+
+def _transposed_per_phase(plan: ConvPlan, x, packed):
+    """Pre-fusion executor: pad/copy + GEMM chain per phase, then
+    stack/transpose interleave (the PR-1 baseline)."""
+    spec = plan.spec
+    c, n = spec.in_c, spec.out_c
+    itemsize = jnp.dtype(spec.dtype).itemsize
+    outs = {}
+    for ex in plan.phases:
+        th, tw = ex.taps
+        u, v = ex.out_hw
+        if th * tw == 0 or u == 0 or v == 0:
+            outs[ex.q] = jnp.zeros(
+                (*x.shape[:-3], u, v, n), x.dtype)
+            continue
+        sub4 = jax.lax.slice(packed, [ex.tap_off * c, 0],
+                             [(ex.tap_off + th * tw) * c, n]) \
+            .reshape(th, tw, c, n)
         xp = pad_or_crop(x, ex.pad)
-        outs[ex.q] = _exec_phase(xp, sub4, ex, (1, 1), (1, 1), x.dtype,
-                                 interpret)
+        hp, wp = xp.shape[-3], xp.shape[-2]
+        # same per-phase path policy PR 1 used (incl. per-phase Pallas when
+        # the plan's backend asks for it) — this IS the measured baseline
+        path, tiles = _choose_path(spec.backend, hp, wp, c, n, ex.taps,
+                                   ex.out_hw, itemsize)
+        outs[ex.q] = _exec_phase(xp, sub4, path, tiles, ex.taps, ex.out_hw,
+                                 (1, 1), (1, 1), x.dtype)
     return dec.interleave_phases(outs, spec.strides, plan.out_hw)
 
 
 def _conv_fwd(plan: ConvPlan, x, kernel, interpret=None):
     ex = plan.phases[0]
     xp = pad_or_crop(x, ex.pad)
-    return _exec_phase(xp, kernel, ex, plan.spec.strides, (1, 1), x.dtype,
-                       interpret)
+    return _exec_phase(xp, kernel, plan.path, plan.tiles, ex.taps, ex.out_hw,
+                       plan.spec.strides, (1, 1), x.dtype, interpret)
 
 
 def _dilated_fwd(plan: ConvPlan, x, kernel, interpret=None):
     ex = plan.phases[0]
     xp = pad_or_crop(x, ex.pad)
-    return _exec_phase(xp, kernel, ex, plan.spec.strides, plan.spec.dilation,
-                       x.dtype, interpret)
+    return _exec_phase(xp, kernel, plan.path, plan.tiles, ex.taps, ex.out_hw,
+                       plan.spec.strides, plan.spec.dilation, x.dtype,
+                       interpret)
 
 
 # ---------------------------------------------------------------------------
-# transposed conv: custom VJP on packed weights (§3.2.3, Fig. 6)
+# transposed conv: custom VJP on the superpack (§3.2.3, Fig. 6)
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -433,10 +733,11 @@ def _pt_bwd(plan, res, dy):
     dy4 = dy.reshape((-1,) + dy.shape[-3:])
     dy_p = pad_or_crop(dy4, plan.bwd_pad)
 
-    # dx — strided-conv form, panels fetched from the packed phase buffers.
+    # dx — strided-conv form, panels fetched from the superpack at the
+    # plan-time row offsets.
     acc = None
-    for (m, nn, key, row) in plan.dx_taps:
-        panel = jax.lax.slice(packed[key], [row * c, 0],
+    for (m, nn, row) in plan.dx_taps:
+        panel = jax.lax.slice(packed, [row * c, 0],
                               [(row + 1) * c, spec.out_c])   # (C, N)
         wnd = jax.lax.slice(
             dy_p, [0, m, nn, 0],
@@ -447,13 +748,11 @@ def _pt_bwd(plan, res, dy):
         acc = t if acc is None else acc + t
     dx = acc.astype(x.dtype).reshape(x.shape)
 
-    # dK — dilated-kernel form, emitted directly in the packed layout.
-    dk = {}
+    # dK — dilated-kernel form, emitted directly in superpack order.
+    dk_segs = []
     for ex in plan.phases:
         th, tw = ex.taps
-        if th == 0 or tw == 0:
-            dk[ex.key] = jnp.zeros(packed[ex.key].shape,
-                                   packed[ex.key].dtype)
+        if th * tw == 0:
             continue
         rows = []
         for t_h in range(th):
@@ -470,8 +769,11 @@ def _pt_bwd(plan, res, dy):
                                        preferred_element_type=jnp.float32))
             rows.append(jnp.stack(cols, 0))
         sub = jnp.stack(rows, 0)                      # (T_h, T_w, C, N)
-        dk[ex.key] = sub.reshape(th * tw * c, spec.out_c).astype(
-            packed[ex.key].dtype)
+        dk_segs.append(sub.reshape(th * tw * c, spec.out_c))
+    if dk_segs:
+        dk = jnp.concatenate(dk_segs, axis=0).astype(packed.dtype)
+    else:
+        dk = jnp.zeros(packed.shape, packed.dtype)
     return dx, dk
 
 

@@ -153,3 +153,45 @@ def memory_reduction_transpose(b, h, w, c, r, s, n, stride, itemsize=4):
     base = bytes_naive_transpose(b, h, w, c, r, s, n, stride, itemsize)
     huge = bytes_huge_transpose(b, h, w, c, r, s, n, stride, itemsize)
     return dict(naive_bytes=base, huge_bytes=huge, reduction=1.0 - huge / base)
+
+
+def bytes_planned_transpose(plan, b=1, itemsize=4):
+    """Traffic model derived from an actual ``ConvPlan`` (not the closed
+    form): what each planned executor must stream per call.
+
+    - ``per_phase``: every phase writes its own padded copy of the plane,
+      its taps re-read that copy, and the stack/transpose interleave
+      re-reads + re-writes the full output (the PR-1 executor).
+    - ``fused``: ONE padded plane written and resident once, every phase's
+      taps read it in place, the superpack streams once, and the output is
+      written once, already interleaved (the single-launch executor).
+    """
+    spec = plan.spec
+    h, w = spec.in_hw
+    c, n = spec.in_c, spec.out_c
+    oh, ow = plan.out_hw
+    read_x = b * h * w * c
+
+    per_phase = read_x
+    for ex in plan.phases:
+        th, tw = ex.taps
+        u, v = ex.out_hw
+        if th * tw == 0 or u * v == 0:
+            continue
+        hp = h + max(0, ex.pad[0][0]) + max(0, ex.pad[0][1])
+        wp = w + max(0, ex.pad[1][0]) + max(0, ex.pad[1][1])
+        per_phase += b * hp * wp * c                 # phase's padded copy
+        per_phase += b * th * tw * u * v * c         # tap-view reads
+        per_phase += th * tw * c * n                 # phase weights
+        per_phase += b * u * v * n                   # phase output write
+    per_phase += 2 * b * oh * ow * n                 # interleave read+write
+
+    (glh, ghh), (glw, ghw) = plan.gpad
+    hg, wg = h + glh + ghh, w + glw + ghw
+    fused = read_x
+    fused += b * hg * wg * c                         # single padded plane
+    fused += b * hg * wg * c                         # one residency, read once
+    fused += plan.total_taps * c * n                 # superpack streams once
+    fused += b * oh * ow * n                         # interleaved output write
+    return dict(per_phase_bytes=itemsize * per_phase,
+                fused_bytes=itemsize * fused)

@@ -14,7 +14,7 @@ from typing import Sequence
 import jax
 
 from repro.core.plan import (conv_spec, pick_vmem_tiles, plan_conv,
-                             _conv_fwd, _dilated_fwd)
+                             _conv_fwd, _dilated_fwd, _transposed_fwd)
 
 Pair = tuple[int, int]
 
@@ -38,3 +38,20 @@ def untangled_conv2d(x: jax.Array, kernel: jax.Array, *,
     if kind == "dilated":
         return _dilated_fwd(plan, x, kernel, interpret)
     return _conv_fwd(plan, x, kernel, interpret)
+
+
+@partial(jax.jit, static_argnames=("strides", "padding", "interpret"))
+def untangled_deconv2d(x: jax.Array, kernel: jax.Array, *,
+                       strides: Pair = (2, 2),
+                       padding: Sequence[Pair] = ((2, 2), (2, 2)),
+                       interpret: bool | None = None) -> jax.Array:
+    """Fused transposed conv (forward only): every phase in one launch.
+
+    Kernel-level entry with an explicit ``interpret`` knob — packs per call,
+    so it is for kernel tests and experimentation; serving holds the
+    superpack and goes through ``ConvPlan.apply``.
+    """
+    spec = conv_spec("transposed", x.shape, kernel.shape, strides=strides,
+                     padding=padding, dtype=x.dtype, backend="pallas")
+    plan = plan_conv(spec)
+    return _transposed_fwd(plan, x, plan.pack(kernel), interpret)

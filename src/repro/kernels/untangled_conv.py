@@ -17,8 +17,15 @@ TPU mapping decisions (the HUGE2 "cache locality" story, restated for VMEM/MXU):
 * taps are a *static* unrolled loop of MXU matmuls with an f32 VMEM
   accumulator; the C grid axis is innermost-sequential so the accumulator
   carries across C tiles (revisiting semantics).
-* phase outputs of the transposed conv are written densely; interleaving is a
-  reshape/transpose outside the kernel (layout transform, no scatter).
+
+``_deconv_kernel`` extends the same mapping to the *fused* transposed conv:
+ONE launch computes every s_h*s_w output phase over a single VMEM residency
+of the globally padded plane.  Each phase's taps accumulate into its segment
+of a shared f32 scratch (plan-time ``acc_off`` row offsets), the superpack
+weight buffer rides in tap-major ``(ΣT, C_t, N_t)``, and the flush writes
+the **interleaved** output block directly with strided in-kernel stores —
+no per-phase launches, no per-phase input copies, no stack/transpose
+interleave pass.
 
 Grid: ``(B, N/N_t, C/C_t)`` — C innermost (reduction).
 """
@@ -114,7 +121,116 @@ def untangled_conv2d_pallas(x: jax.Array, kernel: jax.Array, *,
     return out[..., :n]
 
 
+def _deconv_kernel(x_ref, k_ref, o_ref, acc_ref, *, phases, strides: Pair,
+                   n_c_tiles: int):
+    """Multi-phase transposed conv: every phase's taps over one VMEM
+    residency of the padded plane, flushed as direct interleaved writes.
+
+    ``phases`` is a static tuple of per-phase records
+    ``(q_h, q_w, tap_off, T_h, T_w, xoff_h, xoff_w, U, V, acc_off)`` — all
+    plan-time constants, so the loop fully unrolls into an MXU matmul chain.
+    """
+    sh, sw = strides
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                       # (Hg, Wg, C_t) resident in VMEM
+    for (qh, qw, tap_off, th, tw, xh, xw, u, v, acc_off) in phases:
+        if th * tw == 0 or u * v == 0:
+            continue
+        acc = acc_ref[pl.ds(acc_off, u * v), :]
+        for t in range(th * tw):       # static tap unroll -> MXU matmuls
+            ti, tj = divmod(t, tw)
+            xs = jax.lax.slice(x, (xh + ti, xw + tj, 0),
+                               (xh + ti + u, xw + tj + v, x.shape[2]))
+            acc += jnp.dot(xs.reshape(u * v, xs.shape[2]),
+                           k_ref[tap_off + t],
+                           preferred_element_type=jnp.float32)
+        acc_ref[pl.ds(acc_off, u * v), :] = acc
+
+    @pl.when(ci == n_c_tiles - 1)
+    def _flush():
+        for (qh, qw, tap_off, th, tw, xh, xw, u, v, acc_off) in phases:
+            if u * v == 0:
+                continue
+            blk = acc_ref[pl.ds(acc_off, u * v), :]
+            o_ref[0, pl.Slice(qh, u, sh), pl.Slice(qw, v, sw), :] = (
+                blk.reshape(u, v, blk.shape[-1]).astype(o_ref.dtype))
+
+
+def untangled_deconv2d_pallas(xg: jax.Array, superpack: jax.Array, *,
+                              phases, out_hw: Pair, strides: Pair,
+                              sum_uv: int, c_tile: int = 128,
+                              n_tile: int = 128, out_dtype=None,
+                              interpret: bool | None = None) -> jax.Array:
+    """Fused transposed conv: ONE kernel launch for all s_h*s_w phases.
+
+    xg: (B, Hg, Wg, C) globally padded plane; superpack: (ΣT·C, N) tap-major
+    phase sub-kernels (``ConvPlan.pack`` layout); ``phases`` the plan's
+    ``PhaseExec`` records.  Output (B, out_h, out_w, N), written interleaved
+    inside the kernel — no stack/transpose pass afterwards.
+    """
+    b, hg, wg, c = xg.shape
+    n = superpack.shape[1]
+    total_taps = superpack.shape[0] // max(1, c)
+    oh, ow = out_hw
+    out_dtype = out_dtype or xg.dtype
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    k3 = superpack.reshape(total_taps, c, n)
+    c_tile = min(c_tile, c)
+    n_tile = min(n_tile, n)
+    cp = -(-c // c_tile) * c_tile
+    np_ = -(-n // n_tile) * n_tile
+    if cp != c:
+        xg = jnp.pad(xg, ((0, 0), (0, 0), (0, 0), (0, cp - c)))
+        k3 = jnp.pad(k3, ((0, 0), (0, cp - c), (0, 0)))
+    if np_ != n:
+        k3 = jnp.pad(k3, ((0, 0), (0, 0), (0, np_ - n)))
+    n_c_tiles = cp // c_tile
+
+    meta = tuple(
+        (ex.q[0], ex.q[1], ex.tap_off, ex.taps[0], ex.taps[1],
+         ex.xoff[0], ex.xoff[1], ex.out_hw[0], ex.out_hw[1], ex.acc_off)
+        for ex in phases)
+    grid = (b, np_ // n_tile, n_c_tiles)
+    out = pl.pallas_call(
+        functools.partial(_deconv_kernel, phases=meta, strides=strides,
+                          n_c_tiles=n_c_tiles),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hg, wg, c_tile), lambda b_, n_, c_: (b_, 0, 0, c_)),
+            pl.BlockSpec((total_taps, c_tile, n_tile),
+                         lambda b_, n_, c_: (0, c_, n_)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow, n_tile),
+                               lambda b_, n_, c_: (b_, 0, 0, n_)),
+        out_shape=jax.ShapeDtypeStruct((b, oh, ow, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((sum_uv, n_tile), jnp.float32)],
+        interpret=interpret,
+    )(xg, k3)
+    return out[..., :n]
+
+
 def vmem_bytes_estimate(hp, wp, c_tile, r, s, n_tile, oh, ow, itemsize=4):
-    """Working-set estimate used by the dispatcher to pick tile sizes."""
+    """Working-set estimate used by the dispatcher to pick tile sizes.
+
+    The accumulator scratch is always f32 (4 bytes/elem) regardless of the
+    input dtype; only the plane, kernel, and output blocks scale with
+    ``itemsize``.
+    """
     return itemsize * (hp * wp * c_tile + r * s * c_tile * n_tile +
-                       2 * oh * ow * n_tile)
+                       oh * ow * n_tile) + 4 * oh * ow * n_tile
+
+
+def vmem_bytes_estimate_fused(hg, wg, c_tile, total_taps, n_tile, sum_uv,
+                              oh, ow, itemsize=4):
+    """Working set of the fused multi-phase kernel: global plane block +
+    superpack tile + full interleaved output block, plus the per-phase f32
+    accumulator scratch (always 4 bytes/elem)."""
+    return itemsize * (hg * wg * c_tile + total_taps * c_tile * n_tile +
+                       oh * ow * n_tile) + 4 * sum_uv * n_tile

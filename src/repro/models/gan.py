@@ -4,10 +4,14 @@ Generators stack the exact Table-1 transposed-conv layers; discriminators
 mirror them with strided convs.  Every convolution site gets a ``ConvPlan``
 built **once at model load** (``generator_plans`` / ``discriminator_plans``,
 backed by the keyed plan cache) and the generator's deconv weights are stored
-*packed* — GEMM-ready per-phase sub-kernels — so the generator never
-re-slices a kernel inside a jitted call, forward or backward.  The plans'
+**superpacked** — every phase sub-kernel concatenated into one tap-major
+``(Σ T_h·T_w·C, N)`` buffer per layer — so the generator never re-slices a
+kernel inside a jitted call, every transposed conv executes as a single
+launch, and each layer's weights are one shardable array.  The plans'
 custom VJPs implement the paper's §3.2.3 training formulation directly on
-the packed layout, so both inference *and* training exercise the engine.
+the superpacked layout, so both inference *and* training exercise the
+engine.  (Pre-superpack checkpoints that stored per-phase dicts still load:
+``ConvPlan.apply`` / ``unpack`` adapt them via ``as_superpack``.)
 (The discriminator keeps undecomposed HWIO kernels; its backward flips and
 packs per step, which is off the serving hot path.)
 
@@ -122,8 +126,8 @@ def generator_init(key, cfg: GANConfig, dtype=jnp.float32):
             ks[i + 1], (l.kernel, l.kernel, l.in_c, l.out_c), dtype) * 0.02
         p[f"dc{i}"] = plans[i].pack(kernel)
         p[f"b{i}"] = jnp.zeros((l.out_c,), dtype)
-        # packed buffers are (T_h*T_w*C, N): shard the output-channel dim
-        s[f"dc{i}"] = {k: cm.spec(None, "model") for k in p[f"dc{i}"]}
+        # the superpack is one (Σ T_h*T_w*C, N) buffer: shard out-channels
+        s[f"dc{i}"] = cm.spec(None, "model")
         s[f"b{i}"] = cm.spec("model")
     return p, s
 

@@ -1,0 +1,241 @@
+"""Fused single-launch transposed conv: one Pallas launch / one wide GEMM
+per conv site, superpacked weight layout, and fused-vs-per-phase parity.
+No hypothesis dependency — this file must run everywhere tier-1 runs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import reference as ref
+from repro.core.plan import ConvSpec, conv_spec, plan_conv
+from repro.models.gan import DCGAN_LAYERS, deconv_padding
+
+
+def assert_close(a, b, tol=2e-4):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=tol, atol=tol)
+
+
+def count_eqns(jaxpr, prim_name):
+    """Recursively count equations named ``prim_name``, descending into
+    sub-jaxprs (custom_vjp calls, pjit bodies, ...) — but not into a
+    pallas_call's kernel body: its interior matmuls live inside the one
+    launch being counted."""
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == prim_name:
+            total += 1
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (list, tuple)) else [v]):
+                if hasattr(sub, "eqns"):
+                    total += count_eqns(sub, prim_name)
+                elif hasattr(sub, "jaxpr"):
+                    total += count_eqns(sub.jaxpr, prim_name)
+    return total
+
+
+def dcgan_plan(l, backend="xla"):
+    return plan_conv(ConvSpec(
+        kind="transposed", in_hw=(l.in_hw, l.in_hw), in_c=l.in_c,
+        out_c=l.out_c, kernel_hw=(l.kernel, l.kernel),
+        strides=(l.stride, l.stride),
+        padding=deconv_padding(l.kernel, l.stride), backend=backend))
+
+
+# ---------------------------------------------------------------------------
+# the acceptance property: ONE launch / ONE wide GEMM per conv site
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("i", range(len(DCGAN_LAYERS)))
+def test_xla_forward_is_single_wide_gemm(i):
+    """Every Table-1 DCGAN deconv site lowers to exactly one dot_general."""
+    l = DCGAN_LAYERS[i]
+    plan = dcgan_plan(l)
+    assert plan.path in ("fused_tap", "fused_plane"), plan.path
+    x = jnp.zeros((1, l.in_hw, l.in_hw, l.in_c), jnp.float32)
+    packed = jnp.zeros((plan.total_taps * l.in_c, l.out_c), jnp.float32)
+    jaxpr = jax.make_jaxpr(plan.apply)(x, packed)
+    assert count_eqns(jaxpr.jaxpr, "dot_general") == 1
+    assert count_eqns(jaxpr.jaxpr, "pallas_call") == 0
+
+
+def test_pallas_forward_is_single_launch():
+    """backend='pallas' lowers the whole transposed conv to one pallas_call
+    (and no XLA GEMM outside it)."""
+    plan = plan_conv(ConvSpec(
+        kind="transposed", in_hw=(4, 4), in_c=64, out_c=32, kernel_hw=(5, 5),
+        strides=(2, 2), padding=((2, 3), (2, 3)), backend="pallas"))
+    assert plan.path == "pallas" and plan.tiles is not None
+    x = jnp.zeros((2, 4, 4, 64), jnp.float32)
+    packed = jnp.zeros((plan.total_taps * 64, 32), jnp.float32)
+    jaxpr = jax.make_jaxpr(plan.apply)(x, packed)
+    assert count_eqns(jaxpr.jaxpr, "pallas_call") == 1
+    assert count_eqns(jaxpr.jaxpr, "dot_general") == 0
+
+
+# ---------------------------------------------------------------------------
+# superpack layout invariants
+# ---------------------------------------------------------------------------
+
+def test_superpack_layout_and_offsets():
+    k = jax.random.normal(jax.random.PRNGKey(0), (5, 4, 3, 2), jnp.float32)
+    plan = plan_conv(conv_spec("transposed", (1, 4, 4, 3), k.shape,
+                               strides=(2, 3), padding=((2, 2), (1, 1))))
+    packed = plan.pack(k)
+    c, n = plan.spec.in_c, plan.spec.out_c
+    assert packed.shape == (plan.total_taps * c, n)
+    # each phase's rows sit at tap_off*C and match the per-phase slicing
+    from repro.core.decompose import decompose_kernel
+    subs = decompose_kernel(k, (2, 3), ((2, 2), (1, 1)))
+    for ex in plan.phases:
+        th, tw = ex.taps
+        if th * tw == 0:
+            continue
+        seg = packed[ex.tap_off * c:(ex.tap_off + th * tw) * c]
+        np.testing.assert_array_equal(
+            np.asarray(seg), np.asarray(subs[ex.q].reshape(th * tw * c, n)))
+    # offsets partition the buffer exactly
+    assert sum(ex.taps[0] * ex.taps[1] for ex in plan.phases) \
+        == plan.total_taps
+    np.testing.assert_array_equal(np.asarray(plan.unpack(packed)),
+                                  np.asarray(k))
+
+
+def test_legacy_phase_dict_adapts_to_superpack():
+    """Pre-superpack checkpoints ({key: per-phase buf}) still apply/unpack."""
+    k = jax.random.normal(jax.random.PRNGKey(1), (4, 4, 6, 8), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 5, 5, 6), jnp.float32)
+    pads = ((1, 2), (1, 2))
+    plan = plan_conv(conv_spec("transposed", x.shape, k.shape,
+                               strides=(2, 2), padding=pads))
+    from repro.core.decompose import decompose_kernel
+    subs = decompose_kernel(k, (2, 2), pads)
+    legacy = {ex.key: subs[ex.q].reshape(-1, 8) for ex in plan.phases}
+    np.testing.assert_array_equal(np.asarray(plan.apply(x, legacy)),
+                                  np.asarray(plan.apply(x, plan.pack(k))))
+    np.testing.assert_array_equal(np.asarray(plan.unpack(legacy)),
+                                  np.asarray(k))
+
+
+# ---------------------------------------------------------------------------
+# fused-vs-per-phase parity: odd strides, asymmetric padding, non-uniform
+# phase sizes (the general interleave path), every whole-conv route
+# ---------------------------------------------------------------------------
+
+PARITY_CASES = [
+    (4, 5, 5, 4, 3, 2, ((2, 3), (1, 0))),    # odd stride, asymmetric pads
+    (5, 4, 3, 3, 3, 3, ((0, 2), (1, 1))),    # non-uniform phase extents
+    (6, 6, 2, 2, 3, 3, ((0, 0), (0, 0))),    # stride > kernel: empty phases
+    (5, 5, 5, 5, 1, 1, ((2, 2), (2, 2))),    # stride 1 degenerate
+    (4, 4, 5, 5, 2, 2, ((2, 3), (2, 3))),    # DCGAN geometry (fused_tap)
+    (8, 8, 4, 4, 2, 2, ((1, 3), (1, 3))),    # cGAN geometry (fused_plane)
+    (7, 3, 6, 2, 4, 2, ((3, 1), (0, 1))),    # wildly asymmetric
+]
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("case", PARITY_CASES)
+def test_fused_matches_per_phase_and_oracle(case, backend):
+    h, w, r, s, sh, sw, pads = case
+    key = jax.random.PRNGKey(abs(hash(case)) % (2 ** 31))
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (2, h, w, 3), jnp.float32)
+    k = jax.random.normal(k2, (r, s, 3, 4), jnp.float32)
+    plan = plan_conv(conv_spec("transposed", x.shape, k.shape,
+                               strides=(sh, sw), padding=pads,
+                               backend=backend))
+    packed = plan.pack(k)
+    want = ref.oracle_conv_transpose2d(x, k, strides=(sh, sw), padding=pads)
+    assert_close(plan.apply(x, packed), want)
+    assert_close(plan.apply_per_phase(x, packed), want)
+
+
+@pytest.mark.parametrize("case", PARITY_CASES[:4])
+def test_grad_of_apply_on_superpack(case):
+    """VJP through the fused executor, on the superpacked layout, matches
+    autodiff of the XLA oracle (dx directly; dK after unpack)."""
+    h, w, r, s, sh, sw, pads = case
+    key = jax.random.PRNGKey(abs(hash(case)) % (2 ** 31) + 1)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (2, h, w, 3), jnp.float32)
+    k = jax.random.normal(k2, (r, s, 3, 4), jnp.float32)
+    plan = plan_conv(conv_spec("transposed", x.shape, k.shape,
+                               strides=(sh, sw), padding=pads))
+    packed = plan.pack(k)
+    y, vjp = jax.vjp(plan.apply, x, packed)
+    y_o, vjp_o = jax.vjp(
+        lambda x, k: ref.oracle_conv_transpose2d(
+            x, k, strides=(sh, sw), padding=pads), x, k)
+    assert_close(y, y_o)
+    dy = jax.random.normal(k3, y.shape)
+    (dx, dpacked), (dx_o, dk_o) = vjp(dy), vjp_o(dy)
+    assert dpacked.shape == packed.shape       # grads stay superpacked
+    assert_close(dx, dx_o)
+    assert_close(plan.unpack(dpacked), dk_o)
+
+
+def test_fused_pallas_kernel_direct():
+    """Kernel-level fused deconv entry (interpret mode) vs the oracle."""
+    from repro.kernels.ops import untangled_deconv2d
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, (2, 4, 4, 64), jnp.float32)
+    k = jax.random.normal(k2, (5, 5, 64, 32), jnp.float32)
+    got = untangled_deconv2d(x, k, strides=(2, 2), padding=((2, 3), (2, 3)),
+                             interpret=True)
+    want = ref.oracle_conv_transpose2d(x, k, strides=(2, 2),
+                                       padding=((2, 3), (2, 3)))
+    assert_close(got, want, tol=2e-5)
+
+
+def test_fused_pallas_bf16_and_ragged_tiles():
+    """bf16 input + channel counts that don't divide the tile size."""
+    from repro.kernels.ops import untangled_deconv2d
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    x = jax.random.normal(k1, (1, 5, 5, 130), jnp.bfloat16)
+    k = jax.random.normal(k2, (3, 3, 130, 40), jnp.bfloat16)
+    got = untangled_deconv2d(x, k, strides=(2, 2), padding=((1, 1), (1, 1)),
+                             interpret=True)
+    want = ref.oracle_conv_transpose2d(x.astype(jnp.float32),
+                                       k.astype(jnp.float32),
+                                       strides=(2, 2), padding=((1, 1), (1, 1)))
+    assert_close(got, want, tol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# satellite: VMEM estimates count the f32 accumulator at 4 bytes
+# ---------------------------------------------------------------------------
+
+def test_vmem_estimate_accumulator_is_f32():
+    from repro.kernels.untangled_conv import (vmem_bytes_estimate,
+                                              vmem_bytes_estimate_fused)
+    hp = wp = 16; c_t = n_t = 8; r = s = 3; oh = ow = 14
+    for itemsize in (1, 2, 4):
+        est = vmem_bytes_estimate(hp, wp, c_t, r, s, n_t, oh, ow, itemsize)
+        streamed = itemsize * (hp * wp * c_t + r * s * c_t * n_t
+                               + oh * ow * n_t)
+        # the accumulator contribution is itemsize-independent: always f32
+        assert est - streamed == 4 * oh * ow * n_t
+    est2 = vmem_bytes_estimate_fused(hp, wp, c_t, r * s, n_t, oh * ow,
+                                     oh, ow, itemsize=2)
+    streamed2 = 2 * (hp * wp * c_t + r * s * c_t * n_t + oh * ow * n_t)
+    assert est2 - streamed2 == 4 * oh * ow * n_t
+
+
+def test_bf16_plan_picks_tiles_accounting_f32_scratch():
+    """A bf16 spec must not get bigger tiles than the f32 scratch allows:
+    the estimate at itemsize=2 still carries the 4-byte accumulator."""
+    from repro.kernels.untangled_conv import vmem_bytes_estimate_fused
+    plan = plan_conv(ConvSpec(
+        kind="transposed", in_hw=(16, 16), in_c=256, out_c=256,
+        kernel_hw=(5, 5), strides=(2, 2), padding=((2, 3), (2, 3)),
+        dtype="bfloat16", backend="pallas"))
+    if plan.path != "pallas":
+        pytest.skip("no VMEM-feasible tiling on this geometry")
+    c_t, n_t = plan.tiles
+    (glh, ghh), (glw, ghw) = plan.gpad
+    hg, wg = 16 + glh + ghh, 16 + glw + ghw
+    est = vmem_bytes_estimate_fused(hg, wg, c_t, plan.total_taps, n_t,
+                                    plan.sum_uv, *plan.out_hw, itemsize=2)
+    assert est <= 12 * 1024 * 1024
