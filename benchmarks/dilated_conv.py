@@ -1,29 +1,55 @@
-"""Paper §3.2.2: untangled dilated (atrous) convolution vs the naive engine
-that materializes the zero-inserted kernel.  Layer shapes follow DeepLab-v3
-atrous blocks (the paper's semantic-segmentation motivation): 3x3 kernels,
-dilation 2/4, CIFAR-scale feature maps on the edge budget.
+"""Paper §3.2.2: untangled dilated (atrous) convolution, benchmarked on the
+semantic-segmentation block suite.
 
-Routed through planned execution: each site's ``ConvPlan`` is built once at
-load (reported as ``plan_ms``), the steady-state loop times
-``jax.jit(plan.apply)`` — the same entry the serving path uses — against
-the naive engine.
+Engines per layer, all jitted, min-of-N wall-clock (the same measurement
+convention as fig7: the paper's comparison is against the baseline *engine*
+that executes the zero-inserted formulation, with ``lax`` kept as the
+correctness oracle):
+
+- ``untangled_us``     — the planned single-correlation executor
+  (``plan.apply`` on the (R·S·C, N) superpack: one wide GEMM / one Pallas
+  launch / per-tap fallback, chosen at plan time).
+- ``rhs_dilation_us``  — the rhs-dilation baseline engine: materialize the
+  rhs-dilated (zero-inserted) kernel, then im2col GEMM at the dilated
+  extent (``reference.naive_dilated_conv2d`` — DarkNet's pipeline, the
+  engine the paper measured against).  The headline geomean is against
+  this.
+- ``lax_oracle_us``    — XLA's own fused ``conv_general_dilated`` with
+  ``rhs_dilation``, reported for transparency: on CPU XLA's Eigen conv is
+  itself zero-free and equal-FLOP, so the untangled executor trades within
+  noise of it (see ``geomean_untangled_vs_lax_oracle``); the engine's win
+  is against engines that *execute* the zero-inserted formulation, plus
+  the load-time packed-weight layout the oracle cannot hold.
+
+Layer shapes are the SegNet context blocks (``models/segnet.py`` — constant
+resolution, dilation 1..8) plus DeepLab-v3-style atrous heads at CIFAR/edge
+scale.  Emits machine-readable ``BENCH_dilated.json`` (per-layer µs +
+``geomean_untangled_vs_rhs_dilation``) next to ``BENCH_fig7.json``.
 """
 from __future__ import annotations
 
 import functools
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.util import csv_row, time_fn
+from benchmarks.util import csv_row, geomean, time_fn
 from repro.core import reference as ref
 from repro.core.plan import conv_spec, plan_conv
+from repro.models.segnet import SEGNET, atrous_padding
 
 BATCH = 1
+JSON_PATH = "BENCH_dilated.json"
 
-LAYERS = (
+# segmentation block suite: the SEGNET context module measured end-to-end
+# (16x16 plane at width 128, d = 1,2,4,8) + DeepLab-v3-style atrous blocks
+CONTEXT = tuple(
+    (SEGNET.in_hw // 4, SEGNET.width, SEGNET.width, 3, l.dilation)
+    for l in SEGNET.layers if l.kind == "dilated")
+LAYERS = CONTEXT + (
     # (H, C, N, k, dilation)
     (33, 256, 256, 3, 2),
     (33, 256, 256, 3, 4),
@@ -32,37 +58,84 @@ LAYERS = (
 )
 
 
-def main(print_csv=True):
-    rows = []
-    for (h, c, n, k, d) in LAYERS:
-        key = jax.random.PRNGKey(h)
-        x = jax.random.normal(key, (BATCH, h, h, c), jnp.float32)
-        kern = jax.random.normal(key, (k, k, c, n), jnp.float32)
-        pad = ((d, d), (d, d))
+def bench_layer(h, c, n, k, d, iters=5, warmup=2):
+    key = jax.random.PRNGKey(h * 7 + d)
+    x = jax.random.normal(key, (BATCH, h, h, c), jnp.float32)
+    kern = jax.random.normal(key, (k, k, c, n), jnp.float32)
+    pad = atrous_padding(k, d)
 
-        # model-load: one plan per site (identity pack for dilated kernels)
-        t0 = time.perf_counter()
-        plan = plan_conv(conv_spec("dilated", x.shape, kern.shape,
-                                   dilation=(d, d), padding=pad))
-        plan_ms = (time.perf_counter() - t0) * 1e3
+    # model-load: one plan per site, superpacked weights
+    t0 = time.perf_counter()
+    plan = plan_conv(conv_spec("dilated", x.shape, kern.shape,
+                               dilation=(d, d), padding=pad))
+    plan_ms = (time.perf_counter() - t0) * 1e3
+    packed = jax.block_until_ready(plan.pack(kern))
 
-        naive = jax.jit(functools.partial(ref.naive_dilated_conv2d,
-                                          dilation=(d, d), padding=pad))
-        planned = jax.jit(plan.apply)
-        want = ref.oracle_dilated_conv2d(x, kern, dilation=(d, d),
-                                         padding=pad)
-        np.testing.assert_allclose(np.asarray(planned(x, kern)),
-                                   np.asarray(want), rtol=2e-4, atol=2e-4)
-        tn = time_fn(naive, x, kern, iters=5)
-        th = time_fn(planned, x, kern, iters=5)
-        rows.append(csv_row(f"dilated_{h}x{h}x{c}_d{d}", th * 1e6,
-                            f"naive_us={tn * 1e6:.1f} "
-                            f"speedup={tn / th:.2f}x "
-                            f"plan_ms={plan_ms:.2f}"))
+    untangled = jax.jit(plan.apply)
+    baseline = jax.jit(functools.partial(ref.naive_dilated_conv2d,
+                                         dilation=(d, d), padding=pad))
+    oracle = jax.jit(functools.partial(ref.oracle_dilated_conv2d,
+                                       dilation=(d, d), padding=pad))
+    want = oracle(x, kern)
+    np.testing.assert_allclose(np.asarray(untangled(x, packed)),
+                               np.asarray(want), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(baseline(x, kern)),
+                               np.asarray(want), rtol=2e-4, atol=2e-4)
+    bytes_model = ref.bytes_planned_single(plan, b=BATCH)
+    return {
+        "path": plan.path,
+        "plan_ms": plan_ms,
+        "untangled_us": time_fn(untangled, x, packed, iters=iters,
+                                warmup=warmup) * 1e6,
+        "rhs_dilation_us": time_fn(baseline, x, kern, iters=iters,
+                                   warmup=warmup) * 1e6,
+        "lax_oracle_us": time_fn(oracle, x, kern, iters=iters,
+                                 warmup=warmup) * 1e6,
+        "bytes_reduction_vs_naive": bytes_model["reduction"],
+    }
+
+
+def main(print_csv=True, quick=False, json_path=JSON_PATH):
+    iters, warmup = (3, 1) if quick else (5, 2)
+    rows, records = [], []
+    for i, (h, c, n, k, d) in enumerate(LAYERS):
+        t = bench_layer(h, c, n, k, d, iters=iters, warmup=warmup)
+        # L<i> suffix: the context module legitimately repeats d=1 (the
+        # DilatedNet schedule), so the position disambiguates JSON records
+        # (and the repeat's plan_ms is a cache hit, not a second build)
+        rec = dict(name=f"dilated_L{i}_{h}x{h}x{c}_d{d}", in_hw=h, in_c=c,
+                   out_c=n, kernel=k, dilation=d, **t)
+        rec["speedup_vs_rhs_dilation"] = (t["rhs_dilation_us"]
+                                         / t["untangled_us"])
+        rec["speedup_vs_lax_oracle"] = t["lax_oracle_us"] / t["untangled_us"]
+        records.append(rec)
+        rows.append(csv_row(
+            rec["name"], t["untangled_us"],
+            f"rhs_dilation_us={t['rhs_dilation_us']:.1f} "
+            f"speedup={rec['speedup_vs_rhs_dilation']:.2f}x "
+            f"lax_oracle_us={t['lax_oracle_us']:.1f} "
+            f"vs_lax={rec['speedup_vs_lax_oracle']:.2f}x "
+            f"path={t['path']} plan_ms={t['plan_ms']:.2f}"))
+
+    geo = geomean([r["speedup_vs_rhs_dilation"] for r in records])
+    geo_lax = geomean([r["speedup_vs_lax_oracle"] for r in records])
+    payload = {
+        "bench": "dilated", "batch": BATCH, "quick": quick,
+        "backend": jax.default_backend(),
+        "layers": records,
+        "geomean_untangled_vs_rhs_dilation": geo,
+        "geomean_untangled_vs_lax_oracle": geo_lax,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
     if print_csv:
         for r in rows:
             print(r)
-    return rows
+        print(f"# geomean_untangled_vs_rhs_dilation={geo:.2f}x "
+              f"(vs_lax_oracle={geo_lax:.2f}x)"
+              + (f" -> {json_path}" if json_path else ""))
+    return payload
 
 
 if __name__ == "__main__":

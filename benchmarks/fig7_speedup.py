@@ -27,7 +27,7 @@ import json
 import jax
 import jax.numpy as jnp
 
-from benchmarks.util import csv_row, time_fn
+from benchmarks.util import csv_row, geomean as geo_mean, time_fn
 from repro.core import huge_conv_transpose2d
 from repro.core import reference as ref
 from repro.core.plan import ConvSpec, plan_conv
@@ -106,7 +106,7 @@ def main(print_csv=True, quick=False, json_path=JSON_PATH):
                 f"unplanned_us={t['unplanned_us']:.1f} "
                 f"plan_gain={rec['plan_gain']:.2f}x"))
     dc = [r["fused_vs_per_phase"] for r in records if r["gan"] == "DCGAN"]
-    geomean = functools.reduce(lambda a, b: a * b, dc) ** (1.0 / len(dc))
+    geomean = geo_mean(dc)
     payload = {
         "bench": "fig7", "batch": BATCH, "quick": quick,
         "backend": jax.default_backend(),

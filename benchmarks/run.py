@@ -2,14 +2,17 @@
 
 Prints ``name,us_per_call,derived`` CSV and writes machine-readable
 ``BENCH_fig7.json`` (per-layer planned/naive/per-phase µs + the
-fused-vs-per-phase speedup of the single-launch executor) so the perf
-trajectory is tracked run over run.  Run:
+fused-vs-per-phase speedup of the single-launch executor) and
+``BENCH_dilated.json`` (segmentation block suite: untangled vs the
+rhs-dilation baseline engine + the lax oracle) so the perf trajectory is
+tracked run over run.  Run:
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
+                                           [--dilated-json PATH]
 
-``--quick`` keeps the oracle-checked Fig.-7 wall-clock (with a short timing
-loop) so CI smoke still produces the JSON, and skips the remaining slow
-benches.
+``--quick`` keeps the oracle-checked Fig.-7 and dilated wall-clocks (with
+short timing loops) so CI smoke still produces both JSONs, and skips the
+remaining slow benches.
 """
 from __future__ import annotations
 
@@ -22,21 +25,25 @@ def main() -> None:
                     help="short timing loops; skip the slowest benches")
     ap.add_argument("--json", default="BENCH_fig7.json",
                     help="where to write the fig7 JSON ('' disables)")
+    ap.add_argument("--dilated-json", default="BENCH_dilated.json",
+                    help="where to write the dilated JSON ('' disables)")
     args = ap.parse_args()
 
-    from benchmarks import fig7_speedup, fig8_memory, table1_layers
+    from benchmarks import (dilated_conv, fig7_speedup, fig8_memory,
+                            table1_layers)
     print("# paper Table 1 — layer configs + MAC reduction")
     table1_layers.main(walltime=not args.quick)
     print("# paper Fig 8 (left) — memory-access reduction (plan-derived bytes)")
     fig8_memory.main()
     print("# paper Fig 7 — inference speedup vs naive engine (CPU wall-clock)")
     fig7_speedup.main(quick=args.quick, json_path=args.json or None)
+    print("# paper §3.2.2 — dilated (atrous) conv, segmentation block suite")
+    dilated_conv.main(quick=args.quick,
+                      json_path=args.dilated_json or None)
     if not args.quick:
-        from benchmarks import dilated_conv, fig8_training
+        from benchmarks import fig8_training
         print("# paper Fig 8 (right) — GAN training speedup (engine VJPs)")
         fig8_training.main()
-        print("# paper §3.2.2 — dilated (atrous) conv, untangled vs naive")
-        dilated_conv.main()
 
 
 if __name__ == "__main__":

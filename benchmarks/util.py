@@ -27,3 +27,10 @@ def time_fn(fn, *args, iters: int = 10, warmup: int = 3) -> float:
 
 def csv_row(name: str, us: float, derived: str = "") -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+def geomean(vals) -> float:
+    """Geometric mean in log space (overflow-robust, shared by the
+    JSON-emitting benches)."""
+    vals = list(vals)
+    return float(np.exp(np.mean(np.log(vals))))

@@ -47,6 +47,16 @@ def transposed_out_size(in_size: int, k: int, stride: int, pad: Pair) -> int:
     return dil + pad[0] + pad[1] - k + 1
 
 
+def single_out_size(in_size: int, k: int, stride: int, dilation: int,
+                    pad: Pair) -> int:
+    """Output length of the single-correlation (strided / rhs-dilated) conv
+    along one dim: the effective tap reach is ``(k-1)·d + 1`` but the tap
+    *count* stays ``k`` — the zero-free fact the superpack layout encodes.
+    Delegates to ``untangle.conv_out_size`` (one formula, one owner)."""
+    from repro.core.untangle import conv_out_size
+    return conv_out_size(in_size, k, stride, dilation, pad)
+
+
 @dataclasses.dataclass(frozen=True)
 class PhasePlan1D:
     """Everything needed to compute output phase q along one spatial dim."""

@@ -14,11 +14,14 @@ Forward ops
 - ``huge_dilated_conv2d``    — §3.2.2 untangled atrous conv (no kernel zeros).
 
 Backward (§3.2.3, Fig. 6) lives on the plans as ``jax.custom_vjp`` rules that
-run on the *packed* weight layout:
+run on the *packed* weight layout — for **all three kinds**:
 - grad-wrt-input of a transposed conv == a *strided* conv of the output
   derivative maps, with tap panels fetched straight from the packed buffers.
 - grad-wrt-kernel == a *dilated* convolution over the derivative maps,
   emitted directly in the packed per-phase layout.
+- grad-wrt-input of a strided/dilated conv == the mirrored transposed-tap
+  form (one GEMM of dy against the superpack viewed (ΣT, C, N), per-tap
+  shift-and-add); grad-wrt-kernel is emitted in superpack row order.
 
 Note these wrappers take the full HWIO kernel and therefore *pack per call*
 (the slicing is traced into the jitted computation).  That is fine for
@@ -61,7 +64,8 @@ def huge_dilated_conv2d(x, kernel, *, dilation=(2, 2), strides=(1, 1),
                         padding=((0, 0), (0, 0)), backend="xla"):
     """Atrous conv via untangling — the dilated kernel is never materialized.
 
-    Differentiable through JAX autodiff (slices + GEMMs only).
+    Differentiable through the plan's custom VJP on the superpacked layout
+    (the HWIO kernel is flattened tap-major on the way in — a free reshape).
     """
     spec = conv_spec("dilated", x.shape, kernel.shape, strides=strides,
                      padding=padding, dilation=dilation, dtype=x.dtype,

@@ -1,5 +1,5 @@
 """Plan/executor engine: every HUGE² conv is *planned once* at model-load,
-and every transposed conv *executes as one launch*.
+and every conv — transposed, strided, or dilated — *executes as one launch*.
 
 The paper's central claim is that transposed / strided / dilated convolutions
 should be decomposed **offline** and executed as zero-free GEMMs with maximal
@@ -10,18 +10,27 @@ data reuse.  This module is that offline step made explicit:
 - ``plan_conv``  — compiles a spec into a ``ConvPlan`` exactly once (keyed
   LRU cache); everything the old engine recomputed inside every jitted call
   is captured here: per-phase ``PhasePlan1D`` geometry, the *whole-conv*
-  execution path (one fused Pallas launch / one wide XLA GEMM / per-phase
+  execution path (one fused Pallas launch / one wide XLA GEMM / per-tap
   GEMM fallback, with VMEM tile sizes chosen at plan time), and the mirrored
   backward schedules.
-- ``ConvPlan.pack``    — slices the HWIO kernel into the **superpacked**
-  weight layout: all phase sub-kernels concatenated into a single tap-major
-  buffer ``(Σ_q T_h·T_w·C, N)``.  Row offsets into it are plan-time
-  constants (``PhaseExec.tap_off``).  Done once at model load; the superpack
-  *is* the model's parameter from then on.
+- ``ConvPlan.pack``    — flattens the HWIO kernel into the **superpacked**
+  weight layout, one tap-major buffer per site.  For the transposed kind:
+  all phase sub-kernels concatenated, ``(Σ_q T_h·T_w·C, N)``, with phase row
+  offsets as plan-time constants (``PhaseExec.tap_off``).  For the
+  single-correlation kinds ('conv' / 'dilated'): the same tap-major layout
+  with one phase, ``(R·S·C, N)`` — tap ``t = m·S + n`` owns rows
+  ``[t·C, (t+1)·C)``, and dilation never appears in the layout (a dilated
+  kernel packs identically to a dense one — the *geometry* moves into the
+  plan, not the weights).  Done once at model load; the superpack *is* the
+  model's parameter from then on.
 - ``ConvPlan.apply``   — executes the planned convolution on the superpack.
 
-Single-launch transposed execution (EcoFlow-style fusion of all s_h·s_w
-phases over one residency of the input):
+All three kinds execute through the same single-correlation machinery: pad
+the input **once**, keep that plane resident, and run shift-and-add tap
+GEMMs against superpack rows at plan-time offsets.
+
+Transposed execution (EcoFlow-style fusion of all s_h·s_w phases over one
+residency of the input):
 
 * ``pallas``      — one multi-phase Pallas kernel: the globally padded plane
   resident in VMEM once, a static unrolled loop over every phase's taps
@@ -41,14 +50,37 @@ phases over one residency of the input):
   resident plane through plan-time offsets — but phases are separate GEMMs
   and the output goes through ``interleave_phases``.
 
-For the transposed and strided kinds ``apply`` is a ``jax.custom_vjp`` whose
-backward also runs on the superpacked layout:
+Single-correlation execution ('conv' / 'dilated', §3.2.2 — the dilated
+kernel is never zero-inserted; taps read the raw plane at ``m·d_h`` /
+``n·d_w`` offsets):
+
+* ``pallas``      — ONE launch of the superpack Pallas kernel: the padded
+  plane resident in VMEM, a static unrolled tap loop accumulating into f32
+  scratch, tiles picked at plan time from the dilation-aware working set
+  (the plane grows by the dilated tap reach ``(R-1)·d_h``; the superpack
+  tile does not — taps are R·S rows regardless of dilation).
+* ``fused_tap``   — ONE wide XLA GEMM: the R·S tap-shifted (strided,
+  dilated) views of the resident plane concatenated along channels against
+  the full ``(R·S·C, N)`` superpack.  Exact FLOPs (the buffer is built from
+  the raw input — im2col's *layout*, but zero-free and load-time planned).
+* ``taps``        — fallback when the tap-stacked buffer would out-grow the
+  edge memory budget: per-tap shift-and-add GEMMs reading superpack rows
+  ``[t·C, (t+1)·C)`` over the same single resident plane.
+
+``apply`` is a ``jax.custom_vjp`` for **every** kind, running directly on
+the superpacked layout:
 
 * dx of a transposed conv — the §3.2.3 *strided-conv* form: per-tap GEMMs
   of the padded derivative maps against ``(C, N)`` panels fetched straight
   out of the superpack at plan-time row offsets (no kernel reassembly).
 * dK of a transposed conv — the §3.2.3 *dilated-kernel* form, emitted
   directly in superpack order.
+* dx of a strided/dilated conv — the mirrored *transposed-tap* form: one
+  GEMM of dy against the superpack viewed ``(ΣT, C, N)``, then per-tap
+  strided/dilated shift-and-add into the padded input plane (the exact
+  transpose of the forward tap reads; no flipped kernel is ever assembled).
+* dK of a strided/dilated conv — tap views of the resident input plane
+  contracted with dy in one GEMM, emitted directly in superpack row order.
 
 No other module slices kernels at execution time; ``repro.core.engine`` and
 ``repro.kernels.ops`` are thin dispatchers over this cache.
@@ -99,11 +131,6 @@ def norm_padding(padding, k_hw) -> tuple[Pair, Pair]:
     if isinstance(a, int):
         return ((a, a), (b, b))
     return (tuple(a), tuple(b))
-
-
-def flip_swap(kernel):
-    """(R,S,C,N) -> spatially flipped, channels swapped (R,S,N,C)."""
-    return jnp.transpose(jnp.flip(kernel, (0, 1)), (0, 1, 3, 2))
 
 
 def pick_vmem_tiles(hp, wp, c, n, r, s, oh, ow, itemsize):
@@ -202,7 +229,8 @@ class PhaseExec:
 
 def _choose_path(backend: str, hp: int, wp: int, c: int, n: int,
                  taps: Pair, out_hw: Pair, itemsize: int) -> tuple[str, Pair | None]:
-    """Single-correlation path choice ('conv' / 'dilated' kinds)."""
+    """Per-phase path choice — kept as the measured baseline policy for
+    ``apply_per_phase`` (the pre-fusion transposed executor)."""
     th, tw = taps
     u, v = out_hw
     if th == 0 or tw == 0 or u == 0 or v == 0:
@@ -215,6 +243,36 @@ def _choose_path(backend: str, hp: int, wp: int, c: int, n: int,
             return "pallas", tiles
     if u * v <= _FUSE_MAX_ROWS and th * tw > 2:
         return "fused", None
+    return "taps", None
+
+
+def _choose_single_path(spec: ConvSpec, hp: int, wp: int,
+                        out_hw: Pair, itemsize: int) -> tuple[str, Pair | None]:
+    """Whole-conv path for the single-correlation kinds ('conv'/'dilated'):
+    one Pallas launch / one wide GEMM / per-tap fallback.
+
+    The same plane-ratio heuristic as the transposed path, extended with
+    the dilation-aware VMEM working set: ``hp``/``wp`` are padded-plane
+    dims that already carry the dilated tap reach ``(R-1)·d``, while the
+    superpack tile stays R·S rows regardless of dilation — a dilated
+    kernel costs plane residency, never weight bytes.  The tap-stacked
+    GEMM buffer carries R·S copies of the output extent (exact FLOPs,
+    im2col-sized layout)."""
+    r, s = spec.kernel_hw
+    c, n = spec.in_c, spec.out_c
+    oh, ow = out_hw
+    want_pallas = spec.backend == "pallas" or (
+        spec.backend == "auto" and jax.default_backend() == "tpu")
+    if want_pallas:
+        tiles = pick_vmem_tiles(hp, wp, c, n, r, s, oh, ow, itemsize)
+        if tiles is not None:
+            return "pallas", tiles
+    # tap-stack blowup vs the resident plane: oh*ow*R*S rows of C against
+    # hp*wp plane rows; cap the materialized buffer like the transposed
+    # fused_plane intermediate (B=1 plan-time bound, re-checked traced).
+    buf_bytes = 4 * oh * ow * r * s * c
+    if buf_bytes <= _PLANE_BYTES_MAX:
+        return "fused_tap", None
     return "taps", None
 
 
@@ -261,22 +319,26 @@ class ConvPlan:
     sum_uv: int                            # Σ_q U·V (fused accumulator rows)
     uniform: bool                          # all phases share (U, V)
     bwd_pad: tuple[Pair, Pair] | None      # transposed: dy padding for dx/dK
-    dx_taps: tuple[tuple, ...] | None      # transposed: (m, n, superpack row)
-    conv_bwd: "ConvPlan | None"            # conv: child transposed plan for dx
+    # (m, n, superpack row) tap schedule.  transposed: dx rows of the
+    # flipped/swapped read.  conv/dilated: the forward row order m·S+n,
+    # walked by both the taps-fallback forward and the backward.
+    dx_taps: tuple[tuple, ...] | None
     build_ms: float = 0.0
 
     # -- weight layout -----------------------------------------------------
     def pack(self, kernel: jax.Array):
-        """Kernel (R,S,C,N) -> packed GEMM-ready weights.
+        """Kernel (R,S,C,N) -> the superpacked GEMM-ready weight buffer.
 
-        'transposed': the **superpack** ``(Σ_q T_h·T_w·C, N)`` — all phase
-        sub-kernels flattened tap-major and concatenated in phase order
-        (row offsets are plan-time constants).  'conv'/'dilated': the kernel
-        itself (identity pack — untangling reads taps in place, there is
-        nothing to pre-slice).
-        """
+        'transposed': ``(Σ_q T_h·T_w·C, N)`` — all phase sub-kernels
+        flattened tap-major and concatenated in phase order (row offsets
+        are plan-time constants).  'conv'/'dilated': the single-phase
+        tap-major flatten ``(R·S·C, N)`` — tap ``t = m·S + n`` owns rows
+        ``[t·C, (t+1)·C)``; dilation changes the *plan geometry*, never the
+        packed layout, so a dilated kernel packs bit-identically to a dense
+        one."""
         if self.spec.kind != "transposed":
-            return kernel
+            r, s = self.spec.kernel_hw
+            return kernel.reshape(r * s * self.spec.in_c, self.spec.out_c)
         subs = dec.decompose_kernel(kernel, self.spec.strides,
                                     self.spec.padding)
         c, n = self.spec.in_c, self.spec.out_c
@@ -291,10 +353,15 @@ class ConvPlan:
         return jnp.concatenate(segs, axis=0)
 
     def as_superpack(self, packed):
-        """Adapt legacy per-phase dicts ({'q0x1': buf} or {(0,1): buf}) onto
-        the superpacked layout; superpack arrays pass through unchanged.
-        Kept so pre-superpack checkpoints load without conversion."""
+        """Adapt legacy weight layouts onto the superpack; superpack arrays
+        pass through unchanged.  Transposed: per-phase dicts ({'q0x1': buf}
+        or {(0,1): buf}) from pre-superpack checkpoints.  'conv'/'dilated':
+        full (R,S,C,N) HWIO kernels from pre-superpack params (the flatten
+        is free — same memory order)."""
         if not isinstance(packed, dict):
+            if self.spec.kind != "transposed" and getattr(
+                    packed, "ndim", 2) == 4:
+                return self.pack(packed)
             return packed
         segs = []
         for ex in self.phases:
@@ -308,10 +375,12 @@ class ConvPlan:
 
     def unpack(self, packed):
         """Packed weights -> full (R,S,C,N) kernel (offline use only).
-        Accepts the superpack or a legacy per-phase dict; round-trips
-        ``pack`` exactly, so checkpoints survive the layout migration."""
+        Accepts the superpack, a full HWIO kernel, or (transposed) a legacy
+        per-phase dict; round-trips ``pack`` exactly, so checkpoints survive
+        the layout migration."""
         if self.spec.kind != "transposed":
-            return packed
+            r, s = self.spec.kernel_hw
+            return packed.reshape(r, s, self.spec.in_c, self.spec.out_c)
         packed = self.as_superpack(packed)
         r, s = self.spec.kernel_hw
         c, n = self.spec.in_c, self.spec.out_c
@@ -338,9 +407,7 @@ class ConvPlan:
                 f"at build time; plan_conv a spec for this shape")
         if self.spec.kind == "transposed":
             return _planned_transposed(self, x, self.as_superpack(packed))
-        if self.spec.kind == "conv":
-            return _planned_conv(self, x, packed)
-        return _dilated_fwd(self, x, packed)       # autodiff through slices
+        return _planned_single(self, x, self.as_superpack(packed))
 
     __call__ = apply
 
@@ -424,39 +491,26 @@ def plan_conv(spec: ConvSpec) -> ConvPlan:
         plan = ConvPlan(spec=spec, out_hw=(oh, ow), phases=tuple(phases),
                         path=path, tiles=tiles, gpad=gpad,
                         total_taps=total_taps, sum_uv=sum_uv, uniform=uniform,
-                        bwd_pad=bwd_pad, dx_taps=tuple(dx_taps),
-                        conv_bwd=None)
+                        bwd_pad=bwd_pad, dx_taps=tuple(dx_taps))
 
     elif spec.kind in ("conv", "dilated"):
         (dh, dw) = spec.dilation if spec.kind == "dilated" else (1, 1)
         hp, wp = h + ph[0] + ph[1], w + pw[0] + pw[1]
-        oh = (hp - (r - 1) * dh - 1) // sh + 1
-        ow = (wp - (s - 1) * dw - 1) // sw + 1
+        oh = dec.single_out_size(h, r, sh, dh, ph)
+        ow = dec.single_out_size(w, s, sw, dw, pw)
         if oh <= 0 or ow <= 0:
             raise ValueError(f"non-positive output {oh}x{ow}")
-        path, tiles = _choose_path(spec.backend, hp, wp, c, n, (r, s),
-                                   (oh, ow), itemsize)
+        path, tiles = _choose_single_path(spec, hp, wp, (oh, ow), itemsize)
         ex = PhaseExec(key="k", q=(0, 0), rho=(0, 0), taps=(r, s),
                        pad=spec.padding, out_hw=(oh, ow))
-        conv_bwd = None
-        if spec.kind == "conv":
-            # mirrored dx plan: transposed conv of dy with the flipped/swapped
-            # kernel.  When the stride does not tile the input exactly, extend
-            # the high padding so the transposed conv emits exactly H (resp. W).
-            def_h = h - ((oh - 1) * sh + (r - 1 - ph[0]) + (r - 1 - ph[1])
-                         - r + 2)
-            def_w = w - ((ow - 1) * sw + (s - 1 - pw[0]) + (s - 1 - pw[1])
-                         - s + 2)
-            conv_bwd = plan_conv(ConvSpec(
-                kind="transposed", in_hw=(oh, ow), in_c=n, out_c=c,
-                kernel_hw=(r, s), strides=(sh, sw),
-                padding=((r - 1 - ph[0], r - 1 - ph[1] + def_h),
-                         (s - 1 - pw[0], s - 1 - pw[1] + def_w)),
-                dtype=spec.dtype, backend="xla"))
+        # superpack row of tap (m, n) is m*S + n — recorded like the
+        # transposed dx schedule so the backward never re-derives layout.
+        taps_sched = tuple((m, nn, m * s + nn)
+                           for m in range(r) for nn in range(s))
         plan = ConvPlan(spec=spec, out_hw=(oh, ow), phases=(ex,),
                         path=path, tiles=tiles, gpad=None,
                         total_taps=r * s, sum_uv=oh * ow, uniform=True,
-                        bwd_pad=None, dx_taps=None, conv_bwd=conv_bwd)
+                        bwd_pad=None, dx_taps=taps_sched)
     else:
         raise ValueError(f"unknown conv kind {spec.kind!r}")
 
@@ -694,19 +748,68 @@ def _transposed_per_phase(plan: ConvPlan, x, packed):
     return dec.interleave_phases(outs, spec.strides, plan.out_hw)
 
 
-def _conv_fwd(plan: ConvPlan, x, kernel, interpret=None):
-    ex = plan.phases[0]
-    xp = pad_or_crop(x, ex.pad)
-    return _exec_phase(xp, kernel, plan.path, plan.tiles, ex.taps, ex.out_hw,
-                       plan.spec.strides, (1, 1), x.dtype, interpret)
+# -- single-correlation ('conv' / 'dilated'): superpack executors -----------
+
+def _single_geom(plan: ConvPlan):
+    spec = plan.spec
+    (dh, dw) = spec.dilation if spec.kind == "dilated" else (1, 1)
+    return spec.strides, (dh, dw), spec.kernel_hw, plan.out_hw
 
 
-def _dilated_fwd(plan: ConvPlan, x, kernel, interpret=None):
-    ex = plan.phases[0]
-    xp = pad_or_crop(x, ex.pad)
-    return _exec_phase(xp, kernel, plan.path, plan.tiles, ex.taps, ex.out_hw,
-                       plan.spec.strides, plan.spec.dilation, x.dtype,
-                       interpret)
+def _single_tap_view(xp: jax.Array, m: int, nn: int, strides: Pair,
+                     dilation: Pair, out_hw: Pair):
+    """Tap (m, n)'s strided/dilated window of the resident padded plane —
+    the zero-free read the naive engine replaces with kernel zero-insertion."""
+    (sh, sw), (dh, dw) = strides, dilation
+    u, v = out_hw
+    return jax.lax.slice(
+        xp, [0, m * dh, nn * dw, 0],
+        [xp.shape[0], m * dh + (u - 1) * sh + 1, nn * dw + (v - 1) * sw + 1,
+         xp.shape[3]],
+        [1, sh, sw, 1])
+
+
+def _single_fwd(plan: ConvPlan, x, packed, interpret=None):
+    """Planned single-correlation forward on the (R·S·C, N) superpack:
+    pad once, keep the plane resident, shift-and-add tap GEMMs."""
+    spec = plan.spec
+    strides, dilation, (r, s), out_hw = _single_geom(plan)
+    c, n = spec.in_c, spec.out_c
+    lead = x.shape[:-3]
+    x4 = x.reshape((-1,) + x.shape[-3:])
+    xp = pad_or_crop(x4, spec.padding)
+    path = plan.path
+    if path == "fused_tap":
+        # plan-time buffer cap assumed B=1; re-check against the traced batch
+        if (4 * x4.shape[0] * out_hw[0] * out_hw[1] * r * s * c
+                > _PLANE_BYTES_MAX):
+            path = "taps"
+    if path == "pallas":
+        from repro.kernels.untangled_conv import untangled_conv2d_superpack_pallas
+        y = untangled_conv2d_superpack_pallas(
+            xp, packed, taps_hw=(r, s), strides=strides,
+            rhs_dilation=dilation, c_tile=plan.tiles[0],
+            n_tile=plan.tiles[1], out_dtype=x.dtype, interpret=interpret)
+    elif path == "fused_tap":
+        # ONE wide GEMM: tap views concatenated channel-major in superpack
+        # row order against the whole (R·S·C, N) buffer.  Exact FLOPs.
+        buf = jnp.concatenate(
+            [_single_tap_view(xp, m, nn, strides, dilation, out_hw)
+             for m in range(r) for nn in range(s)], axis=-1)
+        y = jax.lax.dot_general(buf, packed, (((3,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        y = y.astype(x.dtype)
+    else:
+        # per-tap shift-and-add GEMMs; panels are superpack rows [t·C,(t+1)·C)
+        acc = None
+        for (m, nn, row) in plan.dx_taps:
+            xs = _single_tap_view(xp, m, nn, strides, dilation, out_hw)
+            panel = jax.lax.slice(packed, [row * c, 0], [(row + 1) * c, n])
+            t = jax.lax.dot_general(xs, panel, (((3,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+            acc = t if acc is None else acc + t
+        y = acc.astype(x.dtype)
+    return y.reshape(lead + y.shape[1:])
 
 
 # ---------------------------------------------------------------------------
@@ -781,49 +884,92 @@ _planned_transposed.defvjp(_pt_fwd, _pt_bwd)
 
 
 # ---------------------------------------------------------------------------
-# strided conv: custom VJP mirrored through a child transposed plan
+# single correlation ('conv' / 'dilated'): custom VJP on the superpack,
+# mirroring _pt_bwd — no flipped kernel is ever assembled, no zero inserted
 # ---------------------------------------------------------------------------
 
-def _grad_kernel_strided(plan: ConvPlan, x4, dy4):
-    """dK of a strided conv: correlate the padded input with the s-dilated
-    derivative maps (paper Fig. 6 step 3), tap by tap."""
-    spec = plan.spec
-    r, s = spec.kernel_hw
-    (sh, sw) = spec.strides
-    oh, ow = plan.out_hw
-    x_p = pad_or_crop(x4, spec.padding)
-    rows = []
-    for rr in range(r):
-        cols = []
-        for ss in range(s):
-            wnd = jax.lax.slice(
-                x_p, [0, rr, ss, 0],
-                [x_p.shape[0], rr + sh * (oh - 1) + 1,
-                 ss + sw * (ow - 1) + 1, x_p.shape[3]],
-                [1, sh, sw, 1])
-            cols.append(jnp.einsum("bouc,boun->cn", wnd, dy4,
-                                   preferred_element_type=jnp.float32))
-        rows.append(jnp.stack(cols, 0))
-    return jnp.stack(rows, 0)
+def _unpad_transpose(dxp: jax.Array, pads, in_hw: Pair) -> jax.Array:
+    """Exact transpose of ``pad_or_crop``: slice off the positive pads,
+    zero-pad back anything the forward cropped (negative pads)."""
+    (ph, pw) = pads
+    hp, wp = dxp.shape[-3], dxp.shape[-2]
+    dx = dxp[..., max(0, ph[0]):hp - max(0, ph[1]),
+             max(0, pw[0]):wp - max(0, pw[1]), :]
+    grow = [(0, 0)] * (dxp.ndim - 3) + [
+        (max(0, -ph[0]), max(0, -ph[1])),
+        (max(0, -pw[0]), max(0, -pw[1])), (0, 0)]
+    if any(g != (0, 0) for g in grow):
+        dx = jnp.pad(dx, grow)
+    assert dx.shape[-3] == in_hw[0] and dx.shape[-2] == in_hw[1]
+    return dx
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _planned_conv(plan: ConvPlan, x, kernel):
-    return _conv_fwd(plan, x, kernel)
+def _planned_single(plan: ConvPlan, x, packed):
+    return _single_fwd(plan, x, packed)
 
 
-def _pc_fwd(plan, x, kernel):
-    return _conv_fwd(plan, x, kernel), (x, kernel)
+def _ps_fwd(plan, x, packed):
+    return _single_fwd(plan, x, packed), (x, packed)
 
 
-def _pc_bwd(plan, res, dy):
-    x, kernel = res
+def _ps_bwd(plan, res, dy):
+    x, packed = res
+    spec = plan.spec
+    strides, dilation, (r, s), (oh, ow) = _single_geom(plan)
+    (sh, sw), (dh, dw) = strides, dilation
+    c, n = spec.in_c, spec.out_c
     x4 = x.reshape((-1,) + x.shape[-3:])
     dy4 = dy.reshape((-1,) + dy.shape[-3:])
-    dx = plan.conv_bwd.apply_kernel(dy4, flip_swap(kernel)).astype(x.dtype)
-    dx = dx.reshape(x.shape)
-    dk = _grad_kernel_strided(plan, x4, dy4).astype(kernel.dtype)
-    return dx, dk
+    xp = pad_or_crop(x4, spec.padding)
+    b, hp, wp = xp.shape[0], xp.shape[1], xp.shape[2]
+    # the fused backward materializes (B, OH, OW, ΣT, C) f32 buffers; honor
+    # the same plane-bytes cap (and traced batch) that governs the forward,
+    # falling back to per-tap GEMMs on exactly the plans that need it
+    fused_bwd = 4 * b * oh * ow * r * s * c <= _PLANE_BYTES_MAX
+
+    # dx — transposed-tap form: GEMMs of dy against superpack (C, N) panels
+    # (one wide GEMM over the (ΣT, C, N) view when the buffer fits), each
+    # tap's plane scattered back through the exact transpose of its forward
+    # strided/dilated read.
+    g = None
+    if fused_bwd:
+        w3 = packed.reshape(r * s, c, n)
+        g = jax.lax.dot_general(dy4, w3, (((3,), (2,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        # g: (B, OH, OW, ΣT, C)
+    dxp = jnp.zeros((b, hp, wp, c), jnp.float32)
+    for (m, nn, row) in plan.dx_taps:
+        if g is not None:
+            gt = g[..., row, :]
+        else:
+            panel = jax.lax.slice(packed, [row * c, 0], [(row + 1) * c, n])
+            gt = jax.lax.dot_general(dy4, panel, (((3,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+        dxp = dxp.at[:, m * dh:m * dh + (oh - 1) * sh + 1:sh,
+                     nn * dw:nn * dw + (ow - 1) * sw + 1:sw, :].add(gt)
+    dx = _unpad_transpose(dxp, spec.padding, spec.in_hw)
+    dx = dx.astype(x.dtype).reshape(x.shape)
+
+    # dK — tap views of the resident plane against dy (one GEMM over the
+    # stacked views when they fit, else per tap), emitted directly in
+    # superpack row order (paper Fig. 6 step 3, packed layout).
+    if fused_bwd:
+        buf = jnp.stack(
+            [_single_tap_view(xp, m, nn, strides, dilation, (oh, ow))
+             for (m, nn, _) in plan.dx_taps], axis=0)
+        dk3 = jax.lax.dot_general(buf, dy4,
+                                  (((1, 2, 3), (0, 1, 2)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        dk = dk3.reshape(r * s * c, n)
+    else:
+        dk = jnp.concatenate(
+            [jax.lax.dot_general(
+                _single_tap_view(xp, m, nn, strides, dilation, (oh, ow)),
+                dy4, (((0, 1, 2), (0, 1, 2)), ((), ())),
+                preferred_element_type=jnp.float32)
+             for (m, nn, _) in plan.dx_taps], axis=0)
+    return dx, dk.astype(packed.dtype)
 
 
-_planned_conv.defvjp(_pc_fwd, _pc_bwd)
+_planned_single.defvjp(_ps_fwd, _ps_bwd)

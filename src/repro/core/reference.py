@@ -155,6 +155,58 @@ def memory_reduction_transpose(b, h, w, c, r, s, n, stride, itemsize=4):
     return dict(naive_bytes=base, huge_bytes=huge, reduction=1.0 - huge / base)
 
 
+def bytes_naive_dilated(b, h, w, c, r, s, n, out_hw, dilation, itemsize=4):
+    """Traffic of the DarkNet dilated path: materialize the zero-inserted
+    kernel, then im2col at the *dilated* kernel extent — every inserted zero
+    is written once, then streamed through the patch buffer.  ``out_hw`` and
+    ``dilation`` come from the actual plan geometry, so strided and
+    asymmetrically padded sites are modeled exactly (stride and padding are
+    already folded into ``out_hw``)."""
+    (dh, dw) = dilation
+    rd, sd = (r - 1) * dh + 1, (s - 1) * dw + 1
+    oh, ow = out_hw
+    read_k = r * s * c * n
+    write_kd = rd * sd * c * n                       # zero-inserted kernel
+    read_x = b * h * w * c
+    read_patches = b * oh * ow * rd * sd * c         # im2col reads
+    write_im2col = b * oh * ow * rd * sd * c
+    read_im2col = b * oh * ow * rd * sd * c          # GEMM streams buffer
+    read_kd = rd * sd * c * n
+    write_y = b * oh * ow * n
+    return itemsize * (read_k + write_kd + read_x + read_patches +
+                       write_im2col + read_im2col + read_kd + write_y)
+
+
+def bytes_planned_single(plan, b=1, itemsize=4):
+    """Traffic model of one planned single-correlation site ('conv' /
+    'dilated') vs the naive dilated engine, derived from the actual
+    ``ConvPlan`` geometry:
+
+    - ``naive``: zero-inserted kernel + im2col buffer at the dilated extent.
+    - ``untangled``: ONE padded plane written and resident once, R·S
+      strided/dilated tap reads of it, the (R·S·C, N) superpack streamed
+      once, the output written once.  No zero is ever written or read.
+    """
+    spec = plan.spec
+    h, w = spec.in_hw
+    c, n = spec.in_c, spec.out_c
+    r, s = spec.kernel_hw
+    dil = spec.dilation if spec.kind == "dilated" else (1, 1)
+    (ph, pw) = spec.padding
+    oh, ow = plan.out_hw
+    naive = bytes_naive_dilated(b, h, w, c, r, s, n, plan.out_hw, dil,
+                                itemsize)
+    hp, wp = h + ph[0] + ph[1], w + pw[0] + pw[1]
+    untangled = b * h * w * c                        # read x
+    untangled += b * hp * wp * c                     # single padded plane
+    untangled += b * r * s * oh * ow * c             # tap reads of the plane
+    untangled += r * s * c * n                       # superpack streams once
+    untangled += b * oh * ow * n                     # output write
+    untangled *= itemsize
+    return dict(naive_bytes=naive, untangled_bytes=untangled,
+                reduction=1.0 - untangled / naive)
+
+
 def bytes_planned_transpose(plan, b=1, itemsize=4):
     """Traffic model derived from an actual ``ConvPlan`` (not the closed
     form): what each planned executor must stream per call.

@@ -14,7 +14,7 @@ from typing import Sequence
 import jax
 
 from repro.core.plan import (conv_spec, pick_vmem_tiles, plan_conv,
-                             _conv_fwd, _dilated_fwd, _transposed_fwd)
+                             _single_fwd, _transposed_fwd)
 
 Pair = tuple[int, int]
 
@@ -29,15 +29,17 @@ def untangled_conv2d(x: jax.Array, kernel: jax.Array, *,
                      padding: Sequence[Pair] = ((0, 0), (0, 0)),
                      rhs_dilation: Pair = (1, 1),
                      interpret: bool | None = None) -> jax.Array:
-    """Untangled convolution, Pallas-tiled when the plane fits VMEM."""
+    """Untangled convolution, Pallas-tiled when the plane fits VMEM.
+
+    Forward-only kernel entry (packs the HWIO kernel into the superpack per
+    call); training and serving go through ``ConvPlan.apply`` on held
+    superpacked weights."""
     kind = "dilated" if tuple(rhs_dilation) != (1, 1) else "conv"
     spec = conv_spec(kind, x.shape, kernel.shape, strides=strides,
                      padding=padding, dilation=rhs_dilation, dtype=x.dtype,
                      backend="pallas")
     plan = plan_conv(spec)
-    if kind == "dilated":
-        return _dilated_fwd(plan, x, kernel, interpret)
-    return _conv_fwd(plan, x, kernel, interpret)
+    return _single_fwd(plan, x, plan.as_superpack(kernel), interpret)
 
 
 @partial(jax.jit, static_argnames=("strides", "padding", "interpret"))

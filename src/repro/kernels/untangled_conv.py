@@ -11,9 +11,12 @@ TPU mapping decisions (the HUGE2 "cache locality" story, restated for VMEM/MXU):
   duration of a (C_t, N_t) tile — every tap re-reads it from VMEM, never HBM.
   Edge-generative workloads have small planes (4..64 px) and fat channels,
   exactly the regime where this blocking wins (paper §4.1).
-* the kernel is held tap-major ``(R, S, C_t, N_t)``: each tap's (C_t, N_t)
-  panel is a contiguous VMEM tile feeding the MXU with N on the lane axis —
-  the TPU analogue of the paper's C×N×R×S coalescing layout.
+* the kernel is held tap-major ``(R·S, C_t, N_t)`` — the superpack layout
+  ``ConvPlan.pack`` emits: each tap's (C_t, N_t) panel is a contiguous VMEM
+  tile feeding the MXU with N on the lane axis — the TPU analogue of the
+  paper's C×N×R×S coalescing layout.  Strided and dilated correlations run
+  the *same* kernel; dilation only moves each tap's read origin inside the
+  resident plane (no zero-inserted kernel exists anywhere).
 * taps are a *static* unrolled loop of MXU matmuls with an f32 VMEM
   accumulator; the C grid axis is innermost-sequential so the accumulator
   carries across C tiles (revisiting semantics).
@@ -44,6 +47,11 @@ Pair = tuple[int, int]
 
 def _kernel(x_ref, k_ref, o_ref, acc_ref, *, taps_hw: Pair, strides: Pair,
             dilation: Pair, out_hw: Pair, n_c_tiles: int):
+    """Single-correlation kernel over the tap-major superpack: ``k_ref`` is
+    ``(R·S, C_t, N_t)`` — tap ``t = m·S + n``'s panel is one contiguous VMEM
+    tile, the same row order ``ConvPlan.pack`` emits, so the strided and the
+    dilated kind run the *same* kernel (dilation only moves the tap's read
+    origin inside the resident plane)."""
     r, s = taps_hw
     sh, sw = strides
     dh, dw = dilation
@@ -63,7 +71,7 @@ def _kernel(x_ref, k_ref, o_ref, acc_ref, *, taps_hw: Pair, strides: Pair,
                 (m * dh + (oh - 1) * sh + 1, n * dw + (ow - 1) * sw + 1,
                  x.shape[2]),
                 (sh, sw, 1))
-            acc += jnp.dot(xs.reshape(oh * ow, xs.shape[2]), k_ref[m, n],
+            acc += jnp.dot(xs.reshape(oh * ow, xs.shape[2]), k_ref[m * s + n],
                            preferred_element_type=jnp.float32)
     acc_ref[...] = acc
 
@@ -72,16 +80,23 @@ def _kernel(x_ref, k_ref, o_ref, acc_ref, *, taps_hw: Pair, strides: Pair,
         o_ref[0] = acc.reshape(oh, ow, acc.shape[-1]).astype(o_ref.dtype)
 
 
-def untangled_conv2d_pallas(x: jax.Array, kernel: jax.Array, *,
-                            strides: Pair = (1, 1),
-                            rhs_dilation: Pair = (1, 1),
-                            c_tile: int = 128, n_tile: int = 128,
-                            out_dtype=None,
-                            interpret: bool | None = None) -> jax.Array:
-    """Valid (pre-padded) untangled convolution. x:(B,Hp,Wp,C), K:(R,S,C,N)."""
+def untangled_conv2d_superpack_pallas(x: jax.Array, superpack: jax.Array, *,
+                                      taps_hw: Pair,
+                                      strides: Pair = (1, 1),
+                                      rhs_dilation: Pair = (1, 1),
+                                      c_tile: int = 128, n_tile: int = 128,
+                                      out_dtype=None,
+                                      interpret: bool | None = None
+                                      ) -> jax.Array:
+    """ONE launch of the valid (pre-padded) untangled correlation, weights in
+    the superpacked layout.  x:(B,Hp,Wp,C); superpack:(R·S·C, N) tap-major
+    (``ConvPlan.pack``).  Covers the strided and the dilated kind — the
+    dilated kernel is never zero-inserted; taps read the raw plane at
+    ``m·d_h`` / ``n·d_w`` offsets."""
     b, hp, wp, c = x.shape
-    r, s, kc, n = kernel.shape
-    assert kc == c, (kernel.shape, x.shape)
+    r, s = taps_hw
+    n = superpack.shape[1]
+    assert superpack.shape[0] == r * s * c, (superpack.shape, taps_hw, c)
     sh, sw = strides
     dh, dw = rhs_dilation
     oh = (hp - (r - 1) * dh - 1) // sh + 1
@@ -91,15 +106,16 @@ def untangled_conv2d_pallas(x: jax.Array, kernel: jax.Array, *,
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
 
+    k3 = superpack.reshape(r * s, c, n)
     c_tile = min(c_tile, c)
     n_tile = min(n_tile, n)
     cp = -(-c // c_tile) * c_tile
     np_ = -(-n // n_tile) * n_tile
     if cp != c:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, cp - c)))
-        kernel = jnp.pad(kernel, ((0, 0), (0, 0), (0, cp - c), (0, 0)))
+        k3 = jnp.pad(k3, ((0, 0), (0, cp - c), (0, 0)))
     if np_ != n:
-        kernel = jnp.pad(kernel, ((0, 0), (0, 0), (0, 0), (0, np_ - n)))
+        k3 = jnp.pad(k3, ((0, 0), (0, 0), (0, np_ - n)))
     n_c_tiles = cp // c_tile
 
     grid = (b, np_ // n_tile, n_c_tiles)
@@ -110,15 +126,34 @@ def untangled_conv2d_pallas(x: jax.Array, kernel: jax.Array, *,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, hp, wp, c_tile), lambda b_, n_, c_: (b_, 0, 0, c_)),
-            pl.BlockSpec((r, s, c_tile, n_tile), lambda b_, n_, c_: (0, 0, c_, n_)),
+            pl.BlockSpec((r * s, c_tile, n_tile),
+                         lambda b_, n_, c_: (0, c_, n_)),
         ],
         out_specs=pl.BlockSpec((1, oh, ow, n_tile),
                                lambda b_, n_, c_: (b_, 0, 0, n_)),
         out_shape=jax.ShapeDtypeStruct((b, oh, ow, np_), out_dtype),
         scratch_shapes=[pltpu.VMEM((oh * ow, n_tile), jnp.float32)],
         interpret=interpret,
-    )(x, kernel)
+    )(x, k3)
     return out[..., :n]
+
+
+def untangled_conv2d_pallas(x: jax.Array, kernel: jax.Array, *,
+                            strides: Pair = (1, 1),
+                            rhs_dilation: Pair = (1, 1),
+                            c_tile: int = 128, n_tile: int = 128,
+                            out_dtype=None,
+                            interpret: bool | None = None) -> jax.Array:
+    """Valid (pre-padded) untangled convolution. x:(B,Hp,Wp,C), K:(R,S,C,N).
+
+    Full-kernel entry: flattens into the tap-major superpack (free — same
+    memory order) and runs the superpack kernel."""
+    r, s, kc, n = kernel.shape
+    assert kc == x.shape[-1], (kernel.shape, x.shape)
+    return untangled_conv2d_superpack_pallas(
+        x, kernel.reshape(r * s * kc, n), taps_hw=(r, s), strides=strides,
+        rhs_dilation=rhs_dilation, c_tile=c_tile, n_tile=n_tile,
+        out_dtype=out_dtype, interpret=interpret)
 
 
 def _deconv_kernel(x_ref, k_ref, o_ref, acc_ref, *, phases, strides: Pair,
@@ -219,12 +254,13 @@ def untangled_deconv2d_pallas(xg: jax.Array, superpack: jax.Array, *,
 def vmem_bytes_estimate(hp, wp, c_tile, r, s, n_tile, oh, ow, itemsize=4):
     """Working-set estimate used by the dispatcher to pick tile sizes.
 
-    The accumulator scratch is always f32 (4 bytes/elem) regardless of the
-    input dtype; only the plane, kernel, and output blocks scale with
-    ``itemsize``.
+    Thin (r, s) wrapper over ``vmem_bytes_estimate_superpack`` — one owner
+    for the formula.  The accumulator scratch is always f32 (4 bytes/elem)
+    regardless of the input dtype; only the plane, kernel, and output blocks
+    scale with ``itemsize``.
     """
-    return itemsize * (hp * wp * c_tile + r * s * c_tile * n_tile +
-                       oh * ow * n_tile) + 4 * oh * ow * n_tile
+    return vmem_bytes_estimate_superpack(hp, wp, c_tile, r * s, n_tile,
+                                         oh, ow, itemsize)
 
 
 def vmem_bytes_estimate_fused(hg, wg, c_tile, total_taps, n_tile, sum_uv,
@@ -234,3 +270,14 @@ def vmem_bytes_estimate_fused(hg, wg, c_tile, total_taps, n_tile, sum_uv,
     accumulator scratch (always 4 bytes/elem)."""
     return itemsize * (hg * wg * c_tile + total_taps * c_tile * n_tile +
                        oh * ow * n_tile) + 4 * sum_uv * n_tile
+
+
+def vmem_bytes_estimate_superpack(hp, wp, c_tile, total_taps, n_tile,
+                                  oh, ow, itemsize=4):
+    """Working set of the single-correlation superpack kernel — the
+    dilation-aware estimate: ``hp``/``wp`` are padded-plane dims that grow
+    with the dilated tap reach ``(R-1)·d``, while the superpack tile stays
+    ``total_taps = R·S`` rows no matter the dilation (no zero-inserted
+    kernel is ever resident).  f32 accumulator always at 4 bytes/elem."""
+    return itemsize * (hp * wp * c_tile + total_taps * c_tile * n_tile +
+                       oh * ow * n_tile) + 4 * oh * ow * n_tile

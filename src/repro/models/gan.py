@@ -12,8 +12,10 @@ custom VJPs implement the paper's §3.2.3 training formulation directly on
 the superpacked layout, so both inference *and* training exercise the
 engine.  (Pre-superpack checkpoints that stored per-phase dicts still load:
 ``ConvPlan.apply`` / ``unpack`` adapt them via ``as_superpack``.)
-(The discriminator keeps undecomposed HWIO kernels; its backward flips and
-packs per step, which is off the serving hot path.)
+The discriminator now follows the same convention: its strided-conv weights
+are stored as single-phase ``(R·S·C, N)`` superpacks, and its custom VJP
+runs the §3.2.3 backward directly on that layout (pre-superpack checkpoints
+holding HWIO kernels adapt via ``as_superpack``).
 
 The ``backend`` field of ``GANConfig`` is a plan policy ('xla' | 'pallas' |
 'auto') consumed at plan-build time; it is no longer threaded through the
@@ -159,14 +161,17 @@ def generator_unpack(p, cfg: GANConfig):
 # ---------------------------------------------------------------------------
 
 def discriminator_init(key, cfg: GANConfig, dtype=jnp.float32):
+    plans = discriminator_plans(cfg, dtype)
     layers = tuple(reversed(cfg.layers))
     ks = jax.random.split(key, len(layers) + 1)
     p, s = {}, {}
     for i, l in enumerate(layers):
-        # mirror: out_c -> in_c, stride-2 downsample
-        p[f"c{i}"] = jax.random.normal(
+        # mirror: out_c -> in_c, stride-2 downsample; stored superpacked
+        # (R*S*C, N) like the generator deconvs — one shardable buffer
+        kernel = jax.random.normal(
             ks[i], (l.kernel, l.kernel, l.out_c, l.in_c), dtype) * 0.02
-        s[f"c{i}"] = cm.spec(None, None, None, "model")
+        p[f"c{i}"] = plans[i].pack(kernel)
+        s[f"c{i}"] = cm.spec(None, "model")
     l_last = layers[-1]
     fdim = l_last.in_hw ** 2 * l_last.in_c
     p["head"] = jax.random.normal(ks[-1], (fdim, 1), dtype) * 0.02
@@ -177,9 +182,18 @@ def discriminator_init(key, cfg: GANConfig, dtype=jnp.float32):
 def discriminator_apply(p, x, cfg: GANConfig):
     plans = discriminator_plans(cfg, x.dtype)
     for i, plan in enumerate(plans):
-        x = plan.apply(x, p[f"c{i}"])
+        x = plan.apply(x, p[f"c{i}"])       # superpack or legacy HWIO kernel
         x = jax.nn.leaky_relu(x, 0.2)
     return x.reshape(x.shape[0], -1) @ p["head"]
+
+
+def discriminator_unpack(p, cfg: GANConfig):
+    """Packed discriminator params -> full (R,S,C,N) HWIO kernels."""
+    plans = discriminator_plans(cfg)
+    out = dict(p)
+    for i, plan in enumerate(plans):
+        out[f"c{i}"] = plan.unpack(p[f"c{i}"])
+    return out
 
 
 def gan_losses(gp, dp, z, real, cfg: GANConfig):

@@ -17,7 +17,15 @@ from repro.kernels.ref import untangled_conv2d_ref
 
 
 def tol_for(dtype):
-    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    # f32 tolerance must cover accumulation-order divergence: the kernel sums
+    # taps in f32 scratch (tap-major), the reference contracts in a different
+    # order, and reordering an n-term f32 dot can shift the result by up to
+    # ~n·eps relative in the worst case (typical ~sqrt(n)·eps).  The (160,96)
+    # case contracts 5*5*160 = 4000 terms: sqrt(n)·eps ≈ 7.5e-6, n·eps ≈
+    # 4.8e-4.  rtol 1e-4 sits between the typical and worst-case bound —
+    # deterministic on shared hosts without absorbing order-of-magnitude
+    # defects.
+    return 2e-2 if dtype == jnp.bfloat16 else 1e-4
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
