@@ -1,7 +1,8 @@
 """Paper Fig. 7: inference speedup of HUGE2 (decomposition + untangling)
 over the DarkNet-style naive engine (zero-insertion + im2col GEMM), per
-DCGAN / cGAN deconvolution layer.  Wall-clock on this host's CPU — the same
-comparison the paper ran on the Jetson CPU (batch=1 edge inference).
+DCGAN / cGAN / VAE-decoder deconvolution layer.  Wall-clock on this host's
+CPU — the same comparison the paper ran on the Jetson CPU (batch=1 edge
+inference).
 
 Engines measured per layer:
 
@@ -32,6 +33,7 @@ from repro.core import huge_conv_transpose2d
 from repro.core import reference as ref
 from repro.core.plan import ConvSpec, plan_conv
 from repro.models.gan import CGAN_LAYERS, DCGAN_LAYERS, deconv_padding
+from repro.models.vae import VAE
 
 BATCH = 1
 JSON_PATH = "BENCH_fig7.json"
@@ -86,7 +88,10 @@ def bench_layer(l, backend="xla", iters=10, warmup=3):
 def main(print_csv=True, quick=False, json_path=JSON_PATH):
     iters, warmup = (3, 1) if quick else (10, 3)
     rows, records = [], []
-    for gan, layers in (("DCGAN", DCGAN_LAYERS), ("cGAN", CGAN_LAYERS)):
+    # the VAE decoder is the paper's other upsampling-bound workload: its
+    # transposed stages ride the same bench (abstract: GANs *and* VAEs)
+    for gan, layers in (("DCGAN", DCGAN_LAYERS), ("cGAN", CGAN_LAYERS),
+                        ("VAE", VAE.decoder_layers)):
         for i, l in enumerate(layers):
             t = bench_layer(l, iters=iters, warmup=warmup)
             rec = dict(name=f"fig7_{gan}_DC{i + 1}", gan=gan, layer=i + 1,

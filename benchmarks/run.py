@@ -2,17 +2,20 @@
 
 Prints ``name,us_per_call,derived`` CSV and writes machine-readable
 ``BENCH_fig7.json`` (per-layer planned/naive/per-phase µs + the
-fused-vs-per-phase speedup of the single-launch executor) and
+fused-vs-per-phase speedup of the single-launch executor),
 ``BENCH_dilated.json`` (segmentation block suite: untangled vs the
-rhs-dilation baseline engine + the lax oracle) so the perf trajectory is
-tracked run over run.  Run:
+rhs-dilation baseline engine + the lax oracle), and ``BENCH_serve.json``
+(dynamic image batcher vs the fixed-batch serve loop) so the perf
+trajectory is tracked run over run.  See ``docs/BENCHMARKS.md`` for what
+every field means.  Run:
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
                                            [--dilated-json PATH]
+                                           [--serve-json PATH]
 
-``--quick`` keeps the oracle-checked Fig.-7 and dilated wall-clocks (with
-short timing loops) so CI smoke still produces both JSONs, and skips the
-remaining slow benches.
+``--quick`` keeps the oracle-checked Fig.-7, dilated, and serving
+wall-clocks (with short timing loops) so CI smoke still produces every
+JSON, and skips the remaining slow benches.
 """
 from __future__ import annotations
 
@@ -27,10 +30,12 @@ def main() -> None:
                     help="where to write the fig7 JSON ('' disables)")
     ap.add_argument("--dilated-json", default="BENCH_dilated.json",
                     help="where to write the dilated JSON ('' disables)")
+    ap.add_argument("--serve-json", default="BENCH_serve.json",
+                    help="where to write the serving JSON ('' disables)")
     args = ap.parse_args()
 
     from benchmarks import (dilated_conv, fig7_speedup, fig8_memory,
-                            table1_layers)
+                            serve_bench, table1_layers)
     print("# paper Table 1 — layer configs + MAC reduction")
     table1_layers.main(walltime=not args.quick)
     print("# paper Fig 8 (left) — memory-access reduction (plan-derived bytes)")
@@ -40,6 +45,8 @@ def main() -> None:
     print("# paper §3.2.2 — dilated (atrous) conv, segmentation block suite")
     dilated_conv.main(quick=args.quick,
                       json_path=args.dilated_json or None)
+    print("# serving — dynamic image batcher vs fixed-batch loop")
+    serve_bench.main(quick=args.quick, json_path=args.serve_json or None)
     if not args.quick:
         from benchmarks import fig8_training
         print("# paper Fig 8 (right) — GAN training speedup (engine VJPs)")

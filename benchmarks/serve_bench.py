@@ -1,0 +1,136 @@
+"""Serving benchmark: the dynamic image batcher vs the fixed-batch PR-1
+serve loop, on the cGAN generator (paper Table 1), writing
+``BENCH_serve.json``.
+
+Workload: a seeded trace of request *bursts* (geometric sizes, mostly 1-4
+requests — the edge-serving shape: many devices, small coincident queues —
+capped at 16, with two full-16 bursts for coverage), served closed-loop:
+each burst arrives when the server is free, and every request's latency is
+wall-clock from burst arrival to its launch completing.  Both servers run
+the identical jitted generator; only scheduling differs:
+
+- ``fixed``   — the PR-1 loop: every launch is a fixed batch (default 8),
+  tail-padded, regardless of queue depth.
+- ``dynamic`` — ``serving.image_batcher.DynamicImageBatcher``: launches on
+  plan batch buckets (1/4/16/64), covering the queue with the bucket
+  multiset that minimizes *measured* per-bucket launch cost.
+
+The whole trace is repeated and the best run per server kept (min-of-N —
+the same noise-robust statistic as ``util.time_fn``).  Percentiles come
+from the one shared implementation in ``repro.serving.metrics``.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.util import format_stats, latency_stats
+from repro.models import gan
+from repro.serving.image_batcher import DynamicImageBatcher, ImageRequest
+
+JSON_PATH = "BENCH_serve.json"
+FIXED_BATCH = 8            # the PR-1 serve_dcgan default
+BURSTS = 24
+BURST_CAP = 16
+
+
+def make_trace(rng) -> list[int]:
+    sizes = [min(BURST_CAP, int(k)) for k in rng.geometric(0.5, BURSTS)]
+    return sizes + [BURST_CAP, BURST_CAP]      # coverage of the big bucket
+
+
+def serve_fixed(serve, z_dim, trace, rng) -> dict:
+    """The PR-1 loop: drain each burst in fixed-size tail-padded launches."""
+    latencies, launches = [], 0
+    t_start = time.perf_counter()
+    for k in trace:
+        zs = rng.standard_normal((k, z_dim)).astype(np.float32)
+        t_burst = time.perf_counter()
+        for off in range(0, k, FIXED_BATCH):
+            chunk = zs[off:off + FIXED_BATCH]
+            if len(chunk) < FIXED_BATCH:
+                chunk = np.concatenate([chunk, np.zeros(
+                    (FIXED_BATCH - len(chunk), z_dim), np.float32)])
+            jax.block_until_ready(serve(jnp.asarray(chunk)))
+            launches += 1
+            now = time.perf_counter()
+            latencies += [now - t_burst] * min(FIXED_BATCH, k - off)
+    st = latency_stats(latencies, window_s=time.perf_counter() - t_start)
+    st["launches"] = launches
+    st["batch"] = FIXED_BATCH
+    return st
+
+
+def serve_dynamic(batcher, z_dim, trace, rng) -> dict:
+    rid = 0
+    for k in trace:
+        for _ in range(k):
+            batcher.submit(ImageRequest(
+                rid=rid,
+                payload=rng.standard_normal(z_dim).astype(np.float32)))
+            rid += 1
+        while batcher.queue:                   # closed loop: drain the burst
+            batcher.pump(drain=True)
+    return batcher.stats()
+
+
+def main(print_csv=True, quick=False, json_path=JSON_PATH):
+    repeats = 2 if quick else 4
+    cfg = gan.CGAN
+    params, _ = gan.generator_init(jax.random.PRNGKey(0), cfg)
+    serve_fn = lambda z: gan.generator_apply(params, z, cfg)   # noqa: E731
+    serve = jax.jit(serve_fn)
+    jax.block_until_ready(serve(jnp.zeros((FIXED_BATCH, cfg.z_dim))))
+
+    trace = make_trace(np.random.default_rng(7))
+    n_req = sum(trace)
+    # one batcher, warmed once: repeats measure scheduling, not recompiles
+    batcher = DynamicImageBatcher(serve_fn)
+    batcher.warmup(np.zeros((cfg.z_dim,), np.float32))
+    bucket_cost = {b: t * 1e3 for b, t in batcher.bucket_cost_s.items()}
+    best_fixed = best_dyn = None
+    for _ in range(repeats):
+        st_f = serve_fixed(serve, cfg.z_dim, trace,
+                           np.random.default_rng(1))
+        if best_fixed is None or st_f["throughput_rps"] \
+                > best_fixed["throughput_rps"]:
+            best_fixed = st_f
+        batcher.reset_stats()
+        st_d = serve_dynamic(batcher, cfg.z_dim, trace,
+                             np.random.default_rng(1))
+        if best_dyn is None or st_d["throughput_rps"] \
+                > best_dyn["throughput_rps"]:
+            best_dyn = st_d
+
+    payload = {
+        "bench": "serve", "quick": quick, "backend": jax.default_backend(),
+        "model": "cgan", "requests": n_req,
+        "trace": {"bursts": len(trace), "sizes": trace},
+        "buckets": list(batcher.buckets),
+        "bucket_cost_ms": bucket_cost,
+        "fixed": best_fixed,
+        "dynamic": best_dyn,
+        "throughput_ratio":
+            best_dyn["throughput_rps"] / best_fixed["throughput_rps"],
+        "p95_ratio": best_dyn["p95_ms"] / best_fixed["p95_ms"],
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+    if print_csv:
+        print(f"serve_fixed_b{FIXED_BATCH},{best_fixed['mean_ms'] * 1e3:.1f},"
+              f"{format_stats(best_fixed, unit='img')}")
+        print(f"serve_dynamic,{best_dyn['mean_ms'] * 1e3:.1f},"
+              f"{format_stats(best_dyn, unit='img')}")
+        print(f"# dynamic_vs_fixed throughput {payload['throughput_ratio']:.2f}x "
+              f"p95 {payload['p95_ratio']:.2f}x"
+              + (f" -> {json_path}" if json_path else ""))
+    return payload
+
+
+if __name__ == "__main__":
+    main()

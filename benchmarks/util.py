@@ -1,10 +1,18 @@
-"""Benchmark timing helpers (single-host CPU)."""
+"""Benchmark timing helpers (single-host CPU).
+
+Percentile/throughput reporting is NOT implemented here: the one shared
+implementation lives in ``repro.serving.metrics`` (used by the LM slot
+scheduler, the image batcher, and the serve examples alike) and is
+re-exported so benches import it from the same place as their timers.
+"""
 from __future__ import annotations
 
 import time
 
 import jax
 import numpy as np
+
+from repro.serving.metrics import format_stats, latency_stats  # noqa: F401
 
 
 def time_fn(fn, *args, iters: int = 10, warmup: int = 3) -> float:

@@ -1,33 +1,48 @@
 """End-to-end serving driver (the paper's kind: an *inference engine*):
-serve the DCGAN generator with batched requests through the HUGE2 engine.
+serve the DCGAN generator through the dynamic image batcher.
 
-A tiny request queue feeds batches of latent vectors; the server jits one
-batched generator call, drains the queue at a fixed batch size (padding the
-tail), and reports throughput + per-request latency percentiles.
+Latent requests arrive on an open loop (``--rate`` req/s; 0 = one burst)
+and the ``DynamicImageBatcher`` coalesces them into the plan batch buckets
+(1/4/16/64 — the sizes every ``ConvPlan`` routed at build time), padding
+the tail and launching one jitted generator call per bucket.  Model load
+builds every conv plan and packs the weights ONCE; the server then only
+ever executes plan-time routes.
 
-    PYTHONPATH=src python examples/serve_dcgan.py [--requests 64] [--batch 8]
+    PYTHONPATH=src python examples/serve_dcgan.py [--requests 64]
+        [--rate 0] [--max-wait-ms 2] [--backend xla] [--small]
 """
 from __future__ import annotations
 
 import argparse
-import queue
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.models import gan
+from repro.serving.image_batcher import DynamicImageBatcher
+from repro.serving.metrics import format_stats
+
+SMALL_LAYERS = (
+    gan.DeconvLayer(4, 128, 64, 5, 2),
+    gan.DeconvLayer(8, 64, 32, 5, 2),
+    gan.DeconvLayer(16, 32, 3, 5, 2),
+)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64)
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="arrival rate in req/s (0 = submit all at once)")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--backend", choices=("xla", "pallas"), default="xla")
+    ap.add_argument("--small", action="store_true",
+                    help="reduced 32px generator (CI smoke)")
     args = ap.parse_args()
 
-    cfg = gan.GANConfig("dcgan", gan.DCGAN_LAYERS, backend=args.backend)
+    layers = SMALL_LAYERS if args.small else gan.DCGAN_LAYERS
+    cfg = gan.GANConfig("dcgan", layers, backend=args.backend)
     key = jax.random.PRNGKey(0)
     # model load: build every conv plan + pack weights ONCE, serve forever
     t_load = time.perf_counter()
@@ -38,46 +53,31 @@ def main():
     print(f"model load: {len(plans)} conv plans built + weights packed "
           f"in {t_load * 1e3:.1f} ms "
           f"(plan build {sum(p.build_ms for p in plans):.2f} ms)")
-    serve = jax.jit(lambda p, z: gan.generator_apply(p, z, cfg))
 
-    # warmup / compile
-    z0 = jnp.zeros((args.batch, cfg.z_dim), jnp.float32)
-    jax.block_until_ready(serve(params, z0))
+    batcher = DynamicImageBatcher(
+        lambda z: gan.generator_apply(params, z, cfg),
+        max_wait_ms=args.max_wait_ms)
+    proto = np.zeros((cfg.z_dim,), np.float32)
+    t0 = time.perf_counter()
+    batcher.warmup(proto)                  # compile every bucket up front
+    print(f"warmup: {len(batcher.buckets)} bucket executables compiled "
+          f"in {time.perf_counter() - t0:.2f} s "
+          f"(buckets {batcher.buckets})")
 
-    q: "queue.Queue[tuple[int, np.ndarray, float]]" = queue.Queue()
     rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        q.put((i, rng.standard_normal(cfg.z_dim, dtype=np.float32),
-               time.perf_counter()))
+    batcher.drive_open_loop(
+        lambda i: rng.standard_normal(cfg.z_dim).astype(np.float32),
+        args.requests, rate=args.rate)
 
-    latencies = []
-    done = 0
-    t_start = time.perf_counter()
-    while done < args.requests:
-        reqs = []
-        while len(reqs) < args.batch and not q.empty():
-            reqs.append(q.get())
-        ids = [r[0] for r in reqs]
-        zs = np.stack([r[1] for r in reqs])
-        if len(reqs) < args.batch:                       # pad the tail batch
-            zs = np.concatenate(
-                [zs, np.zeros((args.batch - len(reqs), cfg.z_dim),
-                              np.float32)])
-        imgs = jax.block_until_ready(serve(params, jnp.asarray(zs)))
-        now = time.perf_counter()
-        for (i, _, t_in) in reqs:
-            latencies.append(now - t_in)
-        done += len(reqs)
-        assert np.isfinite(np.asarray(imgs[:len(reqs)])).all()
-
-    dt = time.perf_counter() - t_start
-    lat = np.array(latencies) * 1e3
-    print(f"served {args.requests} requests, batch={args.batch}, "
-          f"backend={args.backend}")
-    print(f"throughput {args.requests / dt:8.1f} img/s   "
-          f"latency p50 {np.percentile(lat, 50):6.1f} ms  "
-          f"p95 {np.percentile(lat, 95):6.1f} ms")
-    print(f"output image shape: {imgs.shape[1:]} (64x64x3 from Table 1)")
+    st = batcher.stats()
+    imgs = batcher.done[-1].out
+    print(f"served {st['completed']} requests over {st['launches']} launches "
+          f"(bucket histogram {st['bucket_histogram']}, "
+          f"pad fraction {st['pad_fraction']:.2f})")
+    print(format_stats(st, unit="img"))
+    print(f"output image shape: {imgs.shape} "
+          f"({'32x32x3 reduced' if args.small else '64x64x3 from Table 1'})")
+    assert all(np.isfinite(r.out).all() for r in batcher.done)
 
 
 if __name__ == "__main__":

@@ -30,8 +30,9 @@ def main():
     naive = sum(len(r.prompt) + 6 - 1 for r in cb.done)
     print(f"served {st['completed']} requests in {steps} scheduler steps "
           f"(sequential would take {naive})")
-    print(f"p50 latency {st['p50_latency_s'] * 1e3:.0f} ms, "
-          f"p50 TTFT {st['p50_ttft_s'] * 1e3:.0f} ms")
+    print(f"latency p50 {st['p50_ms']:.0f} ms  p95 {st['p95_ms']:.0f} ms  "
+          f"p99 {st['p99_ms']:.0f} ms, p50 TTFT "
+          f"{st['p50_ttft_s'] * 1e3:.0f} ms")
     assert st["completed"] == n_req and steps < naive
     print("continuous batching beats sequential scheduling ✓")
 

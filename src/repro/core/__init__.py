@@ -4,8 +4,9 @@ from repro.core.decompose import (decompose_kernel, interleave_phases,
                                   transposed_out_size)
 from repro.core.engine import (huge_conv2d, huge_conv_transpose2d,
                                huge_dilated_conv2d)
-from repro.core.plan import (ConvPlan, ConvSpec, conv_spec, plan_cache_clear,
-                             plan_cache_info, plan_conv)
+from repro.core.plan import (BATCH_BUCKETS, ConvPlan, ConvSpec, Route,
+                             conv_spec, plan_cache_clear, plan_cache_info,
+                             plan_conv)
 from repro.core.untangle import (untangled_conv2d, untangled_depthwise_conv1d)
 from repro.core import reference
 
@@ -14,6 +15,6 @@ __all__ = [
     "plan_phases_1d",
     "transposed_out_size", "huge_conv2d", "huge_conv_transpose2d",
     "huge_dilated_conv2d", "untangled_conv2d", "untangled_depthwise_conv1d",
-    "ConvPlan", "ConvSpec", "conv_spec", "plan_conv", "plan_cache_info",
-    "plan_cache_clear", "reference",
+    "BATCH_BUCKETS", "ConvPlan", "ConvSpec", "Route", "conv_spec",
+    "plan_conv", "plan_cache_info", "plan_cache_clear", "reference",
 ]

@@ -12,7 +12,11 @@ data reuse.  This module is that offline step made explicit:
   is captured here: per-phase ``PhasePlan1D`` geometry, the *whole-conv*
   execution path (one fused Pallas launch / one wide XLA GEMM / per-tap
   GEMM fallback, with VMEM tile sizes chosen at plan time), and the mirrored
-  backward schedules.
+  backward schedules.  ``ConvSpec`` carries no batch — instead every plan
+  sizes one ``Route`` per batch bucket (``BATCH_BUCKETS`` = 1/4/16/64)
+  against the plane-bytes/VMEM caps at build time, and the executors look
+  the route up with ``ConvPlan.route_for_batch(B)``; serving pads request
+  batches to the nearest bucket so each bucket jits exactly once.
 - ``ConvPlan.pack``    — flattens the HWIO kernel into the **superpacked**
   weight layout, one tap-major buffer per site.  For the transposed kind:
   all phase sub-kernels concatenated, ``(Σ_q T_h·T_w·C, N)``, with phase row
@@ -107,6 +111,12 @@ _VMEM_BUDGET = 12 * 1024 * 1024
 # concatenate tap views + one wide GEMM when the GEMM has too few rows to
 # amortize per-tap dispatch (paper Fig. 7 DC1).
 _FUSE_MAX_ROWS = 128
+
+# batch buckets every plan sizes a route for at build time.  Serving pads
+# each request batch up to the nearest bucket (``serving/image_batcher``),
+# so the executor jits exactly once per bucket and ``route_for_batch`` is a
+# plan-time table lookup — no byte-cap arithmetic happens at trace time.
+BATCH_BUCKETS = (1, 4, 16, 64)
 
 # whole-conv XLA path heuristic: the plane GEMM computes
 # Hg*Wg*ΣT*C*N MACs where Σ u·v·T_q*C*N would be exact; take the plane
@@ -246,10 +256,27 @@ def _choose_path(backend: str, hp: int, wp: int, c: int, n: int,
     return "taps", None
 
 
-def _choose_single_path(spec: ConvSpec, hp: int, wp: int,
-                        out_hw: Pair, itemsize: int) -> tuple[str, Pair | None]:
-    """Whole-conv path for the single-correlation kinds ('conv'/'dilated'):
-    one Pallas launch / one wide GEMM / per-tap fallback.
+@dataclasses.dataclass(frozen=True)
+class Route:
+    """One batch bucket's execution decision, fixed at plan time.
+
+    ``batch`` is the bucket the byte caps were evaluated at; ``path`` /
+    ``tiles`` are the whole-conv forward route for that bucket, and
+    ``fused_bwd`` says whether the single-correlation backward may
+    materialize its ``(B, OH, OW, ΣT, ·)`` f32 buffers (one wide dy GEMM +
+    one stacked dK GEMM) or must fall back to per-tap GEMMs."""
+
+    batch: int
+    path: str                     # 'pallas'|'fused_plane'|'fused_tap'|'taps'
+    tiles: Pair | None            # (C_t, N_t) when path == 'pallas'
+    fused_bwd: bool = True
+
+
+def _single_route(spec: ConvSpec, hp: int, wp: int, out_hw: Pair,
+                  itemsize: int, batch: int) -> Route:
+    """Whole-conv route for the single-correlation kinds ('conv'/'dilated')
+    at one batch bucket: one Pallas launch / one wide GEMM / per-tap
+    fallback.
 
     The same plane-ratio heuristic as the transposed path, extended with
     the dilation-aware VMEM working set: ``hp``/``wp`` are padded-plane
@@ -257,47 +284,70 @@ def _choose_single_path(spec: ConvSpec, hp: int, wp: int,
     superpack tile stays R·S rows regardless of dilation — a dilated
     kernel costs plane residency, never weight bytes.  The tap-stacked
     GEMM buffer carries R·S copies of the output extent (exact FLOPs,
-    im2col-sized layout)."""
+    im2col-sized layout) and grows linearly in the bucket, so big buckets
+    route to 'taps' where small ones fuse."""
     r, s = spec.kernel_hw
     c, n = spec.in_c, spec.out_c
     oh, ow = out_hw
+    # tap-stack blowup vs the resident plane: B*oh*ow*R*S rows of C against
+    # B*hp*wp plane rows; cap the materialized f32 buffer.  The backward's
+    # dy-GEMM / stacked-dK buffers are the same size, so one cap governs
+    # both directions of the bucket.
+    fused_ok = 4 * batch * oh * ow * r * s * c <= _PLANE_BYTES_MAX
     want_pallas = spec.backend == "pallas" or (
         spec.backend == "auto" and jax.default_backend() == "tpu")
     if want_pallas:
         tiles = pick_vmem_tiles(hp, wp, c, n, r, s, oh, ow, itemsize)
         if tiles is not None:
-            return "pallas", tiles
-    # tap-stack blowup vs the resident plane: oh*ow*R*S rows of C against
-    # hp*wp plane rows; cap the materialized buffer like the transposed
-    # fused_plane intermediate (B=1 plan-time bound, re-checked traced).
-    buf_bytes = 4 * oh * ow * r * s * c
-    if buf_bytes <= _PLANE_BYTES_MAX:
-        return "fused_tap", None
-    return "taps", None
+            return Route(batch, "pallas", tiles, fused_bwd=fused_ok)
+    if fused_ok:
+        return Route(batch, "fused_tap", None, fused_bwd=True)
+    return Route(batch, "taps", None, fused_bwd=False)
 
 
-def _choose_transposed_path(spec: ConvSpec, hg: int, wg: int, out_hw: Pair,
-                            total_taps: int, sum_uv: int, sum_uvt: int,
-                            uniform: bool, itemsize: int):
-    """Whole-conv path for the transposed kind: one launch / one wide GEMM."""
+def _transposed_route(spec: ConvSpec, hg: int, wg: int, out_hw: Pair,
+                      total_taps: int, sum_uv: int, sum_uvt: int,
+                      uniform: bool, itemsize: int, batch: int) -> Route:
+    """Whole-conv route for the transposed kind at one batch bucket: one
+    launch / one wide GEMM, the plane-GEMM intermediate capped at the
+    bucket's size."""
     c, n = spec.in_c, spec.out_c
     oh, ow = out_hw
     if total_taps == 0:
-        return "taps", None        # every phase is empty; executor emits zeros
+        # every phase is empty; executor emits zeros
+        return Route(batch, "taps", None)
     want_pallas = spec.backend == "pallas" or (
         spec.backend == "auto" and jax.default_backend() == "tpu")
     if want_pallas:
         tiles = pick_fused_tiles(hg, wg, c, n, total_taps, sum_uv, oh, ow,
                                  itemsize)
         if tiles is not None:
-            return "pallas", tiles
+            return Route(batch, "pallas", tiles)
     plane_ratio = hg * wg * total_taps / max(1, sum_uvt)
-    plane_bytes = 4 * hg * wg * total_taps * n
+    plane_bytes = 4 * batch * hg * wg * total_taps * n
     if plane_ratio <= _PLANE_RATIO_MAX and plane_bytes <= _PLANE_BYTES_MAX:
-        return "fused_plane", None
+        return Route(batch, "fused_plane", None)
     if uniform:
-        return "fused_tap", None
-    return "taps", None
+        return Route(batch, "fused_tap", None)
+    return Route(batch, "taps", None)
+
+
+def _route_exact(plan: "ConvPlan", batch: int) -> Route:
+    """Re-run the plan-time route choice for an exact (bucket-less) batch —
+    the geometry is rebuilt from the plan's own constants."""
+    spec = plan.spec
+    itemsize = jnp.dtype(spec.dtype).itemsize
+    h, w = spec.in_hw
+    if spec.kind == "transposed":
+        (glh, ghh), (glw, ghw) = plan.gpad
+        sum_uvt = sum(ex.out_hw[0] * ex.out_hw[1] * ex.taps[0] * ex.taps[1]
+                      for ex in plan.phases)
+        return _transposed_route(
+            spec, h + glh + ghh, w + glw + ghw, plan.out_hw, plan.total_taps,
+            plan.sum_uv, sum_uvt, plan.uniform, itemsize, batch)
+    (ph, pw) = spec.padding
+    return _single_route(spec, h + ph[0] + ph[1], w + pw[0] + pw[1],
+                         plan.out_hw, itemsize, batch)
 
 
 # ---------------------------------------------------------------------------
@@ -312,8 +362,6 @@ class ConvPlan:
     spec: ConvSpec
     out_hw: Pair
     phases: tuple[PhaseExec, ...]          # len 1 for 'conv'/'dilated'
-    path: str                              # whole-conv execution path
-    tiles: Pair | None                     # (C_t, N_t) when path == 'pallas'
     gpad: tuple[Pair, Pair] | None         # transposed: single global input pad
     total_taps: int                        # Σ_q T_h·T_w (superpack rows / C)
     sum_uv: int                            # Σ_q U·V (fused accumulator rows)
@@ -323,7 +371,34 @@ class ConvPlan:
     # flipped/swapped read.  conv/dilated: the forward row order m·S+n,
     # walked by both the taps-fallback forward and the backward.
     dx_taps: tuple[tuple, ...] | None
+    # per-bucket routes, ascending by Route.batch (one per BATCH_BUCKETS)
+    routes: tuple[Route, ...] = ()
     build_ms: float = 0.0
+    # memo for batches beyond the largest bucket (plans are cache
+    # singletons, so this fills at most once per distinct oversize batch)
+    _xl_routes: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    @property
+    def path(self) -> str:
+        """The B=1 bucket's path (introspection / the benches' headline)."""
+        return self.routes[0].path
+
+    @property
+    def tiles(self) -> Pair | None:
+        """(C_t, N_t) when the B=1 route is 'pallas'."""
+        return self.routes[0].tiles
+
+    def route_for_batch(self, batch: int) -> Route:
+        """The execution route sized for ``batch``: the smallest plan-time
+        bucket that fits it (callers pad up to ``Route.batch``).  A batch
+        beyond the largest bucket gets an exactly-sized route, built once
+        and memoized — still plan-level arithmetic, never a traced branch."""
+        for r in self.routes:
+            if batch <= r.batch:
+                return r
+        if batch not in self._xl_routes:
+            self._xl_routes[batch] = _route_exact(self, batch)
+        return self._xl_routes[batch]
 
     # -- weight layout -----------------------------------------------------
     def pack(self, kernel: jax.Array):
@@ -471,9 +546,9 @@ def plan_conv(spec: ConvSpec) -> ConvPlan:
                 sum_uvt += out_hw[0] * out_hw[1] * taps[0] * taps[1]
         total_taps, sum_uv = tap_off, acc_off
         uniform = len({ex.out_hw for ex in phases}) == 1
-        path, tiles = _choose_transposed_path(
+        routes = tuple(_transposed_route(
             spec, hg, wg, (oh, ow), total_taps, sum_uv, sum_uvt, uniform,
-            itemsize)
+            itemsize, bb) for bb in BATCH_BUCKETS)
         # dx schedule (strided-conv form): tap (m, n) of the flipped/swapped
         # kernel reads full-kernel tap (r-1-m, s-1-n), which lives in phase
         # ((pl-r') % s) at superpack row tap_off + r'//s (tap units).
@@ -489,9 +564,9 @@ def plan_conv(spec: ConvSpec) -> ConvPlan:
         bwd_pad = ((r - 1 - ph[0], r - 1 - ph[1]),
                    (s - 1 - pw[0], s - 1 - pw[1]))
         plan = ConvPlan(spec=spec, out_hw=(oh, ow), phases=tuple(phases),
-                        path=path, tiles=tiles, gpad=gpad,
-                        total_taps=total_taps, sum_uv=sum_uv, uniform=uniform,
-                        bwd_pad=bwd_pad, dx_taps=tuple(dx_taps))
+                        gpad=gpad, total_taps=total_taps, sum_uv=sum_uv,
+                        uniform=uniform, bwd_pad=bwd_pad,
+                        dx_taps=tuple(dx_taps), routes=routes)
 
     elif spec.kind in ("conv", "dilated"):
         (dh, dw) = spec.dilation if spec.kind == "dilated" else (1, 1)
@@ -500,7 +575,8 @@ def plan_conv(spec: ConvSpec) -> ConvPlan:
         ow = dec.single_out_size(w, s, sw, dw, pw)
         if oh <= 0 or ow <= 0:
             raise ValueError(f"non-positive output {oh}x{ow}")
-        path, tiles = _choose_single_path(spec, hp, wp, (oh, ow), itemsize)
+        routes = tuple(_single_route(spec, hp, wp, (oh, ow), itemsize, bb)
+                       for bb in BATCH_BUCKETS)
         ex = PhaseExec(key="k", q=(0, 0), rho=(0, 0), taps=(r, s),
                        pad=spec.padding, out_hw=(oh, ow))
         # superpack row of tap (m, n) is m*S + n — recorded like the
@@ -508,9 +584,9 @@ def plan_conv(spec: ConvSpec) -> ConvPlan:
         taps_sched = tuple((m, nn, m * s + nn)
                            for m in range(r) for nn in range(s))
         plan = ConvPlan(spec=spec, out_hw=(oh, ow), phases=(ex,),
-                        path=path, tiles=tiles, gpad=None,
-                        total_taps=r * s, sum_uv=oh * ow, uniform=True,
-                        bwd_pad=None, dx_taps=taps_sched)
+                        gpad=None, total_taps=r * s, sum_uv=oh * ow,
+                        uniform=True, bwd_pad=None, dx_taps=taps_sched,
+                        routes=routes)
     else:
         raise ValueError(f"unknown conv kind {spec.kind!r}")
 
@@ -691,21 +767,16 @@ def _transposed_fwd(plan: ConvPlan, x, packed, interpret=None):
         y = jnp.zeros((b, *plan.out_hw, spec.out_c), x.dtype)
         return y.reshape(lead + y.shape[1:])
     xg = _global_plane(plan, x4)
-    path = plan.path
-    if path == "fused_plane":
-        # the plan-time _PLANE_BYTES_MAX cap assumed B=1 (ConvSpec carries no
-        # batch); re-check against the traced batch so a large-batch call
-        # cannot materialize a b-times-bigger plane-GEMM intermediate
-        _, hg, wg, _ = xg.shape
-        if (4 * b * hg * wg * plan.total_taps * spec.out_c
-                > _PLANE_BYTES_MAX):
-            path = "fused_tap" if plan.uniform else "taps"
+    # the bucket's route was sized against the byte caps at plan time —
+    # a large batch lands on a bucket whose plane-GEMM intermediate fits
+    route = plan.route_for_batch(b)
+    path = route.path
     if path == "pallas":
         from repro.kernels.untangled_conv import untangled_deconv2d_pallas
         y = untangled_deconv2d_pallas(
             xg, packed, phases=plan.phases, out_hw=plan.out_hw,
             strides=spec.strides, sum_uv=plan.sum_uv,
-            c_tile=plan.tiles[0], n_tile=plan.tiles[1],
+            c_tile=route.tiles[0], n_tile=route.tiles[1],
             out_dtype=x.dtype, interpret=interpret)
     elif path in ("fused_tap", "fused_plane"):
         fwd = _fused_tap_fwd if path == "fused_tap" else _fused_plane_fwd
@@ -778,18 +849,14 @@ def _single_fwd(plan: ConvPlan, x, packed, interpret=None):
     lead = x.shape[:-3]
     x4 = x.reshape((-1,) + x.shape[-3:])
     xp = pad_or_crop(x4, spec.padding)
-    path = plan.path
-    if path == "fused_tap":
-        # plan-time buffer cap assumed B=1; re-check against the traced batch
-        if (4 * x4.shape[0] * out_hw[0] * out_hw[1] * r * s * c
-                > _PLANE_BYTES_MAX):
-            path = "taps"
+    route = plan.route_for_batch(x4.shape[0])
+    path = route.path
     if path == "pallas":
         from repro.kernels.untangled_conv import untangled_conv2d_superpack_pallas
         y = untangled_conv2d_superpack_pallas(
             xp, packed, taps_hw=(r, s), strides=strides,
-            rhs_dilation=dilation, c_tile=plan.tiles[0],
-            n_tile=plan.tiles[1], out_dtype=x.dtype, interpret=interpret)
+            rhs_dilation=dilation, c_tile=route.tiles[0],
+            n_tile=route.tiles[1], out_dtype=x.dtype, interpret=interpret)
     elif path == "fused_tap":
         # ONE wide GEMM: tap views concatenated channel-major in superpack
         # row order against the whole (R·S·C, N) buffer.  Exact FLOPs.
@@ -923,10 +990,10 @@ def _ps_bwd(plan, res, dy):
     dy4 = dy.reshape((-1,) + dy.shape[-3:])
     xp = pad_or_crop(x4, spec.padding)
     b, hp, wp = xp.shape[0], xp.shape[1], xp.shape[2]
-    # the fused backward materializes (B, OH, OW, ΣT, C) f32 buffers; honor
-    # the same plane-bytes cap (and traced batch) that governs the forward,
-    # falling back to per-tap GEMMs on exactly the plans that need it
-    fused_bwd = 4 * b * oh * ow * r * s * c <= _PLANE_BYTES_MAX
+    # the fused backward materializes (B, OH, OW, ΣT, C) f32 buffers; the
+    # bucket's route carries the same plane-bytes verdict that governs the
+    # forward, falling back to per-tap GEMMs on exactly the plans that need it
+    fused_bwd = plan.route_for_batch(b).fused_bwd
 
     # dx — transposed-tap form: GEMMs of dy against superpack (C, N) panels
     # (one wide GEMM over the (ΣT, C, N) view when the buffer fits), each

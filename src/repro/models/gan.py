@@ -114,23 +114,31 @@ def discriminator_plans(cfg: GANConfig,
 # generator: packed deconv weights, planned execution
 # ---------------------------------------------------------------------------
 
-def generator_init(key, cfg: GANConfig, dtype=jnp.float32):
+def generator_init(key, cfg: GANConfig, dtype=jnp.float32, dist=None):
     """Init generator params with the deconv weights already *packed* into
-    the plans' GEMM-ready per-phase layout (the load-time decomposition)."""
+    the plans' GEMM-ready per-phase layout (the load-time decomposition).
+
+    Each superpack is ONE shardable buffer with logical axes
+    ``(conv_taps, conv_out)`` (``sharding.SUPERPACK_SPEC``); pass a
+    ``DistContext`` and the params come back placed on its mesh
+    (out-channels sharded under the default rules), ready for
+    data-parallel serving/training under ``jax.jit``."""
     plans = generator_plans(cfg, dtype)
     l0 = cfg.layers[0]
     ks = jax.random.split(key, len(cfg.layers) + 1)
     p = {"proj": jax.random.normal(
         ks[0], (cfg.z_dim, l0.in_hw * l0.in_hw * l0.in_c), dtype) * 0.02}
-    s = {"proj": cm.spec(None, "model")}
+    s = {"proj": cm.spec(None, "conv_out")}
     for i, l in enumerate(cfg.layers):
         kernel = jax.random.normal(
             ks[i + 1], (l.kernel, l.kernel, l.in_c, l.out_c), dtype) * 0.02
         p[f"dc{i}"] = plans[i].pack(kernel)
         p[f"b{i}"] = jnp.zeros((l.out_c,), dtype)
         # the superpack is one (Σ T_h*T_w*C, N) buffer: shard out-channels
-        s[f"dc{i}"] = cm.spec(None, "model")
-        s[f"b{i}"] = cm.spec("model")
+        s[f"dc{i}"] = cm.spec("conv_taps", "conv_out")
+        s[f"b{i}"] = cm.spec("conv_out")
+    if dist is not None:
+        p = dist.shard_params(p, s)
     return p, s
 
 
@@ -160,7 +168,7 @@ def generator_unpack(p, cfg: GANConfig):
 # discriminator: planned strided convs (identity packing)
 # ---------------------------------------------------------------------------
 
-def discriminator_init(key, cfg: GANConfig, dtype=jnp.float32):
+def discriminator_init(key, cfg: GANConfig, dtype=jnp.float32, dist=None):
     plans = discriminator_plans(cfg, dtype)
     layers = tuple(reversed(cfg.layers))
     ks = jax.random.split(key, len(layers) + 1)
@@ -171,11 +179,13 @@ def discriminator_init(key, cfg: GANConfig, dtype=jnp.float32):
         kernel = jax.random.normal(
             ks[i], (l.kernel, l.kernel, l.out_c, l.in_c), dtype) * 0.02
         p[f"c{i}"] = plans[i].pack(kernel)
-        s[f"c{i}"] = cm.spec(None, "model")
+        s[f"c{i}"] = cm.spec("conv_taps", "conv_out")
     l_last = layers[-1]
     fdim = l_last.in_hw ** 2 * l_last.in_c
     p["head"] = jax.random.normal(ks[-1], (fdim, 1), dtype) * 0.02
     s["head"] = cm.spec("model", None)
+    if dist is not None:
+        p = dist.shard_params(p, s)
     return p, s
 
 

@@ -113,7 +113,10 @@ def segnet_plans(cfg: SegNetConfig, dtype=jnp.float32) -> tuple[ConvPlan, ...]:
 # params: every conv weight stored superpacked (R·S·C, N)
 # ---------------------------------------------------------------------------
 
-def segnet_init(key, cfg: SegNetConfig, dtype=jnp.float32):
+def segnet_init(key, cfg: SegNetConfig, dtype=jnp.float32, dist=None):
+    """Superpacked params with ``(conv_taps, conv_out)`` logical specs;
+    pass a ``DistContext`` to get them placed on its mesh (out-channels
+    sharded under the default rules) for data-parallel serving."""
     plans = segnet_plans(cfg, dtype)
     ks = jax.random.split(key, len(cfg.layers))
     p, s = {}, {}
@@ -124,8 +127,10 @@ def segnet_init(key, cfg: SegNetConfig, dtype=jnp.float32):
             dtype) * (2.0 / fan_in) ** 0.5
         p[f"w{i}"] = plan.pack(kernel)          # (R·S·C, N) superpack
         p[f"b{i}"] = jnp.zeros((l.out_c,), dtype)
-        s[f"w{i}"] = cm.spec(None, "model")     # shard out-channels
-        s[f"b{i}"] = cm.spec("model")
+        s[f"w{i}"] = cm.spec("conv_taps", "conv_out")   # shard out-channels
+        s[f"b{i}"] = cm.spec("conv_out")
+    if dist is not None:
+        p = dist.shard_params(p, s)
     return p, s
 
 

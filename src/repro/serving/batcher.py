@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as tfm
+from repro.serving.metrics import latency_stats
 
 
 @dataclasses.dataclass
@@ -120,10 +121,15 @@ class ContinuousBatcher:
         return steps
 
     def stats(self):
+        """Serving report via the shared ``serving.metrics`` implementation
+        (same percentile math as the image batcher and the benches), plus
+        the legacy second-unit keys."""
         lat = [r.t_done - r.t_arrival for r in self.done if r.t_done]
         ttft = [r.t_first - r.t_arrival for r in self.done if r.t_first]
-        return {
-            "completed": len(self.done),
-            "p50_latency_s": float(np.percentile(lat, 50)) if lat else 0.0,
-            "p50_ttft_s": float(np.percentile(ttft, 50)) if ttft else 0.0,
-        }
+        st = latency_stats(lat)
+        ttft_st = latency_stats(ttft)
+        st["completed"] = len(self.done)
+        st["p50_latency_s"] = st["p50_ms"] / 1e3
+        st["p50_ttft_s"] = ttft_st["p50_ms"] / 1e3
+        st["ttft_p95_ms"] = ttft_st["p95_ms"]
+        return st

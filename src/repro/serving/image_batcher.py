@@ -1,0 +1,240 @@
+"""Dynamic batching for image/latent serving (the bucket-aware sibling of
+the LM slot scheduler in ``serving/batcher.py``).
+
+Generative-image requests are single tensors (a latent vector for a GAN /
+VAE decoder, an image for segmentation) with no autoregressive state, so
+the scheduling problem is pure *coalescing*: gather whatever is queued,
+pad it up to the nearest plan batch bucket (``core.plan.BATCH_BUCKETS`` —
+the sizes every ``ConvPlan`` routed at build time), and launch one jitted
+call.  The bucket set keeps the number of compiled executables bounded
+(one jit per bucket, compiled on first use or eagerly via ``warmup``) and
+keeps execution on plan-time routes — ``route_for_batch`` never has to
+size a route for an arbitrary traced batch.
+
+Scheduling policy (classic dynamic batching, cf. TF-Serving / Triton):
+
+- launch immediately when a full largest bucket is queued;
+- otherwise wait for more arrivals, but never longer than
+  ``max_wait_ms`` past the oldest request's arrival — then serve the queue
+  on bucket-sized launches, padding the tail;
+- ``drain=True`` (offline / shutdown) flushes without waiting.
+
+**Cost-aware launch planning.**  Buckets quantize compile count, but the
+mapping queue-length -> launch sizes is a policy choice: padding 5 requests
+up to bucket 16 can cost 2x a bucket-4 launch plus a single.  ``warmup``
+therefore *measures* each bucket's launch wall-time (the serving analog of
+the engine's plan-time route choice), and the scheduler covers the queue
+with the bucket multiset minimizing total measured cost (a tiny
+coin-change DP, memoized per queue length).  Until costs are measured the
+policy degrades to round-up-to-nearest-bucket.
+
+Data-parallel serving: pass a ``DistContext`` and the batcher constrains
+the batched input over the mesh's data axes inside the jitted call, so the
+padded bucket shards across devices under ``NamedSharding`` (weights are
+sharded at init by the model's ``dist``-aware ``*_init``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.plan import BATCH_BUCKETS
+from repro.serving.metrics import latency_stats
+
+
+@dataclasses.dataclass
+class ImageRequest:
+    rid: int
+    payload: np.ndarray                    # (z_dim,) latent or (H, W, C) image
+    t_arrival: float = dataclasses.field(default_factory=time.perf_counter)
+    t_done: Optional[float] = None
+    out: Optional[np.ndarray] = None
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        return None if self.t_done is None else self.t_done - self.t_arrival
+
+
+class DynamicImageBatcher:
+    """Coalesce image requests into plan batch buckets, one jit per bucket.
+
+    ``serve_fn(batch) -> batch`` is the model forward with parameters
+    already bound (e.g. ``lambda z: generator_apply(params, z, cfg)``); the
+    batcher jits it once and relies on shape specialization for the
+    per-bucket executables.
+    """
+
+    def __init__(self, serve_fn: Callable, *,
+                 buckets: Sequence[int] = BATCH_BUCKETS,
+                 max_wait_ms: float = 2.0, dist=None):
+        self.buckets = tuple(sorted(int(b) for b in buckets))
+        if not self.buckets or self.buckets[0] < 1:
+            raise ValueError(f"bad buckets {buckets}")
+        self.max_wait_s = max_wait_ms / 1e3
+        self.dist = dist
+
+        def batched(x):
+            if dist is not None:
+                x = dist.constrain(x, dist.image_spec())
+            return serve_fn(x)
+
+        self._serve = jax.jit(batched)
+        self.queue: deque[ImageRequest] = deque()
+        self.done: list[ImageRequest] = []
+        self.launches: list[tuple[int, int]] = []   # (bucket, live) per call
+        self.bucket_cost_s: dict[int, float] = {}   # measured by warmup
+        self._sched_memo: dict[int, tuple[float, int]] = {0: (0.0, 0)}
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    # -- client API ----------------------------------------------------------
+    def submit(self, req: ImageRequest):
+        if self._t_first is None:
+            self._t_first = time.perf_counter()
+        self.queue.append(req)
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket that fits ``n`` (the largest bucket caps a launch)."""
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    def warmup(self, proto: Optional[np.ndarray] = None, *, iters: int = 2):
+        """Eagerly compile every bucket (zeros payload) so serving latency
+        never includes a compile, and *measure* each bucket's launch cost
+        (min of ``iters``) for the cost-aware scheduler.  ``proto`` is one
+        request payload (shape/dtype template); defaults to the oldest
+        queued request's."""
+        if proto is None:
+            if not self.queue:
+                raise ValueError("warmup needs a proto payload or a queued "
+                                 "request for the shape")
+            proto = self.queue[0].payload
+        for b in self.buckets:
+            x = jax.numpy.asarray(np.zeros((b,) + proto.shape, proto.dtype))
+            jax.block_until_ready(self._serve(x))       # compile
+            ts = []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(self._serve(x))
+                ts.append(time.perf_counter() - t0)
+            self.bucket_cost_s[b] = min(ts)
+        self._sched_memo = {0: (0.0, 0)}                # rebuild on new costs
+
+    def _first_launch_size(self, n: int) -> int:
+        """Bucket of the next launch for a queue of ``n``: head of the
+        cheapest bucket cover under the measured costs (largest-first so
+        the most waiters complete earliest), else round-up-to-bucket."""
+        if not self.bucket_cost_s:
+            return self.bucket_for(n)
+        best = max(self._plan_cover(n))
+        return best
+
+    def _plan_cover(self, n: int) -> tuple[int, ...]:
+        """Bucket multiset covering ``n`` requests at minimum measured cost
+        (classic coin-change DP over launch sizes; overshoot = tail pad)."""
+        memo = self._sched_memo
+        for i in range(1, n + 1):                        # bottom-up, O(n·|B|)
+            if i not in memo:
+                memo[i] = min(
+                    (self.bucket_cost_s[b] + memo[max(0, i - b)][0], b)
+                    for b in self.buckets)
+        cover, k = [], n
+        while k > 0:
+            b = memo[k][1]
+            cover.append(b)
+            k = max(0, k - b)
+        return tuple(cover)
+
+    # -- scheduler -----------------------------------------------------------
+    def pump(self, *, drain: bool = False) -> list[ImageRequest]:
+        """Launch at most one batch if the policy says go; returns the
+        requests completed by that launch (empty when still coalescing)."""
+        if not self.queue:
+            return []
+        now = time.perf_counter()
+        full = len(self.queue) >= self.buckets[-1]
+        expired = now - self.queue[0].t_arrival >= self.max_wait_s
+        if not (full or expired or drain):
+            return []
+        size = self._first_launch_size(len(self.queue))
+        take = min(len(self.queue), size)
+        reqs = [self.queue.popleft() for _ in range(take)]
+        return self._launch(reqs, bucket=size)
+
+    def run(self, reqs=None, *, drain: bool = True) -> list[ImageRequest]:
+        """Submit ``reqs`` (optional) and pump until the queue is empty.
+        With ``drain=False`` the loop sleeps out the oldest request's
+        max-wait deadline instead of spinning on empty pumps."""
+        for r in reqs or ():
+            self.submit(r)
+        while self.queue:
+            if not self.pump(drain=drain) and not drain and self.queue:
+                wait = self.max_wait_s - (time.perf_counter()
+                                          - self.queue[0].t_arrival)
+                if wait > 0:
+                    time.sleep(min(wait, 1e-3))
+        return self.done
+
+    def _launch(self, reqs: list[ImageRequest],
+                bucket: Optional[int] = None) -> list[ImageRequest]:
+        bucket = self.bucket_for(len(reqs)) if bucket is None else bucket
+        batch = np.stack([r.payload for r in reqs])
+        if len(reqs) < bucket:                       # pad the tail
+            pad = np.zeros((bucket - len(reqs),) + batch.shape[1:],
+                           batch.dtype)
+            batch = np.concatenate([batch, pad])
+        out = jax.block_until_ready(self._serve(jax.numpy.asarray(batch)))
+        out = np.asarray(out)
+        now = time.perf_counter()
+        for i, r in enumerate(reqs):
+            r.out = out[i]
+            r.t_done = now
+        self.done.extend(reqs)
+        self.launches.append((bucket, len(reqs)))
+        self._t_last = now
+        return reqs
+
+    def reset_stats(self):
+        """Drop request/launch history for a fresh measurement window; the
+        compiled bucket executables and measured costs are kept (benchmark
+        repeats must not pay recompilation)."""
+        self.queue.clear()
+        self.done = []
+        self.launches = []
+        self._t_first = self._t_last = None
+
+    # -- open-loop driver (shared by the serve examples / benches) -----------
+    def drive_open_loop(self, make_payload: Callable[[int], np.ndarray],
+                        requests: int, rate: float = 0.0
+                        ) -> list[ImageRequest]:
+        """Submit ``requests`` payloads at ``rate`` req/s (0 = one burst),
+        pumping as arrivals trickle in, then drain the tail."""
+        gap = 1.0 / rate if rate > 0 else 0.0
+        for i in range(requests):
+            if gap:
+                time.sleep(gap)
+            self.submit(ImageRequest(rid=i, payload=make_payload(i)))
+            self.pump()
+        return self.run()
+
+    # -- reporting -----------------------------------------------------------
+    def stats(self) -> dict:
+        window = None
+        if self._t_first is not None and self._t_last is not None:
+            window = self._t_last - self._t_first
+        st = latency_stats([r.latency_s for r in self.done], window_s=window)
+        st["launches"] = len(self.launches)
+        st["bucket_histogram"] = {
+            b: sum(1 for bb, _ in self.launches if bb == b)
+            for b in self.buckets}
+        st["pad_fraction"] = (
+            1.0 - (sum(live for _, live in self.launches)
+                   / max(1, sum(b for b, _ in self.launches))))
+        return st

@@ -24,7 +24,16 @@ DEFAULT_RULES: dict[str, Any] = {
     "batch": ("data",),          # overridden to ('pod','data') multi-pod
     "seq": None,                 # set to 'model' to turn on SP residuals
     "kv_seq": None,              # decode cache sequence dim (long-context)
+    # superpacked conv weights (core.plan): one tap-major (ΣT·C, N) buffer
+    # per site.  Row dim mixes taps and input channels (plan-time offsets
+    # index into it), so the default shards only the out-channel dim —
+    # flip "conv_taps" to 'model' for row-parallel superpacks instead.
+    "conv_taps": None,
+    "conv_out": "model",
 }
+
+# logical spec of every superpacked conv weight buffer
+SUPERPACK_SPEC = P("conv_taps", "conv_out")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +75,38 @@ class DistContext:
         if seq_dim:
             return P(self.rules["batch"], self.rules["seq"], None)
         return P(self.rules["batch"], None)
+
+    def image_spec(self) -> P:
+        """(B, H, W, C) image/latent batch spec: data-parallel over the
+        batch dim, spatial/channel replicated (trailing dims implicit)."""
+        return P(self.rules["batch"])
+
+    def shard_params(self, params, specs):
+        """Place a param tree onto the mesh per its logical spec tree — the
+        DistContext-aware half of every planned model's ``*_init``.  A dim
+        whose size doesn't divide its mesh axes replicates instead (the
+        same rule as ``kv_heads``: sharding is best-effort, never a crash —
+        e.g. a 3-channel image head stays replicated under TP=2).  Like
+        ``constrain``, a mesh-less context is a no-op."""
+        if self.mesh is None:
+            return params
+
+        def put(p, sp):
+            resolved = tuple(self.resolve(sp))
+            resolved += (None,) * (len(p.shape) - len(resolved))
+            out = []
+            for dim, ax in zip(p.shape, resolved):
+                if ax is None:
+                    out.append(None)
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                n = 1
+                for a in axes:
+                    n *= int(self.mesh.shape[a])
+                out.append(ax if dim % n == 0 else None)
+            return jax.device_put(p, NamedSharding(self.mesh, P(*out)))
+
+        return jax.tree.map(put, params, specs)
 
     def constrain(self, x, spec: Optional[P] = None):
         if self.mesh is None:

@@ -1,0 +1,223 @@
+"""Batch-bucketed plan routes: every ConvPlan sizes one Route per batch
+bucket at build time, ``route_for_batch`` is a table lookup, the executors
+never re-derive a path from a traced batch, and every bucket still lowers
+to one launch / one wide GEMM."""
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.plan as planmod
+from repro.core import reference as ref
+from repro.core.plan import BATCH_BUCKETS, ConvSpec, plan_cache_clear, plan_conv
+
+
+def assert_close(a, b, tol=2e-4):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=tol, atol=tol)
+
+
+def count_eqns(jaxpr, prim_name):
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == prim_name:
+            total += 1
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (list, tuple)) else [v]):
+                if hasattr(sub, "eqns"):
+                    total += count_eqns(sub, prim_name)
+                elif hasattr(sub, "jaxpr"):
+                    total += count_eqns(sub.jaxpr, prim_name)
+    return total
+
+
+def transposed_spec(**kw):
+    base = dict(kind="transposed", in_hw=(8, 8), in_c=16, out_c=8,
+                kernel_hw=(5, 5), strides=(2, 2), padding=((2, 2), (2, 2)))
+    base.update(kw)
+    return ConvSpec(**base)
+
+
+def dilated_spec(**kw):
+    base = dict(kind="dilated", in_hw=(16, 16), in_c=8, out_c=8,
+                kernel_hw=(3, 3), dilation=(2, 2), padding=((2, 2), (2, 2)))
+    base.update(kw)
+    return ConvSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# route table shape + lookup semantics
+# ---------------------------------------------------------------------------
+
+def test_every_plan_carries_one_route_per_bucket():
+    for spec in (transposed_spec(), dilated_spec()):
+        plan = plan_conv(spec)
+        assert tuple(r.batch for r in plan.routes) == BATCH_BUCKETS
+        # plan.path stays the B=1 bucket's decision (introspection compat)
+        assert plan.path == plan.routes[0].path
+        assert plan.tiles == plan.routes[0].tiles
+
+
+def test_route_for_batch_rounds_up_to_bucket():
+    plan = plan_conv(dilated_spec())
+    for b, want in ((1, 1), (2, 4), (4, 4), (5, 16), (16, 16), (17, 64),
+                    (64, 64)):
+        assert plan.route_for_batch(b).batch == want
+
+
+def test_route_beyond_largest_bucket_is_exact_and_memoized():
+    plan = plan_conv(dilated_spec())
+    r1 = plan.route_for_batch(1000)
+    assert r1.batch == 1000
+    assert plan.route_for_batch(1000) is r1        # memo hit
+    # an absurd batch must overflow the plane-bytes cap -> per-tap route
+    big = plan.route_for_batch(10 ** 7)
+    assert big.path == "taps" and not big.fused_bwd
+
+
+# ---------------------------------------------------------------------------
+# route-switch boundaries at the plane-bytes cap
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def tight_cap():
+    """Cap sized so the dilated test spec fits fused at B<=4 but not B>=16."""
+    spec = dilated_spec()
+    r, s = spec.kernel_hw
+    oh = ow = 16
+    per_image = 4 * oh * ow * r * s * spec.in_c
+    old = planmod._PLANE_BYTES_MAX
+    planmod._PLANE_BYTES_MAX = per_image * 4          # B=4 fits exactly
+    plan_cache_clear()
+    yield spec
+    planmod._PLANE_BYTES_MAX = old
+    plan_cache_clear()
+
+
+def test_single_route_switches_at_cap(tight_cap):
+    plan = plan_conv(tight_cap)
+    paths = {r.batch: r.path for r in plan.routes}
+    assert paths[1] == "fused_tap" and paths[4] == "fused_tap"
+    assert paths[16] == "taps" and paths[64] == "taps"
+    # the backward verdict flips at the same boundary
+    assert plan.route_for_batch(4).fused_bwd
+    assert not plan.route_for_batch(16).fused_bwd
+
+
+def test_parity_and_vjp_across_the_switch(tight_cap):
+    """Both sides of the route switch match the lax oracle, fwd and bwd."""
+    spec = tight_cap
+    plan = plan_conv(spec)
+    key = jax.random.PRNGKey(0)
+    k = jax.random.normal(key, (3, 3, spec.in_c, spec.out_c), jnp.float32)
+    packed = plan.pack(k)
+    for b in (4, 16):                       # fused_tap side, taps side
+        x = jax.random.normal(jax.random.PRNGKey(b),
+                              (b, 16, 16, spec.in_c), jnp.float32)
+        want = ref.oracle_dilated_conv2d(x, k, dilation=spec.dilation,
+                                         padding=spec.padding)
+        assert_close(plan.apply(x, packed), want)
+        y, vjp = jax.vjp(plan.apply, x, packed)
+        y_o, vjp_o = jax.vjp(lambda x, k: ref.oracle_dilated_conv2d(
+            x, k, dilation=spec.dilation, padding=spec.padding), x, k)
+        dy = jax.random.normal(jax.random.PRNGKey(b + 1), y.shape)
+        (dx, dpk), (dx_o, dk_o) = vjp(dy), vjp_o(dy)
+        assert_close(dx, dx_o, tol=1e-3)
+        assert_close(plan.unpack(dpk), dk_o, tol=1e-3)
+
+
+def test_transposed_route_switches_at_cap():
+    """fused_plane at small buckets degrades to the exact fused_tap (uniform
+    phases) once the bucket-scaled plane-GEMM intermediate busts the cap."""
+    spec = transposed_spec(strides=(2, 2), kernel_hw=(4, 4),
+                           padding=((1, 1), (1, 1)))
+    plan = plan_conv(spec)
+    if plan.routes[0].path != "fused_plane":
+        pytest.skip(f"geometry routed {plan.routes[0].path}, not fused_plane")
+    (glh, ghh), (glw, ghw) = plan.gpad
+    hg = spec.in_hw[0] + glh + ghh
+    wg = spec.in_hw[1] + glw + ghw
+    plane1 = 4 * hg * wg * plan.total_taps * spec.out_c
+    old = planmod._PLANE_BYTES_MAX
+    planmod._PLANE_BYTES_MAX = plane1 * 4             # B=4 fits, B=16 not
+    plan_cache_clear()
+    try:
+        plan_t = plan_conv(spec)
+        paths = {r.batch: r.path for r in plan_t.routes}
+        assert paths[1] == "fused_plane" and paths[4] == "fused_plane"
+        assert paths[16] == "fused_tap" and paths[64] == "fused_tap"
+        # parity on both sides of the boundary
+        key = jax.random.PRNGKey(1)
+        k = jax.random.normal(key, (4, 4, spec.in_c, spec.out_c), jnp.float32)
+        packed = plan_t.pack(k)
+        for b in (4, 16):
+            x = jax.random.normal(jax.random.PRNGKey(b),
+                                  (b, *spec.in_hw, spec.in_c), jnp.float32)
+            want = ref.oracle_conv_transpose2d(
+                x, k, strides=spec.strides, padding=spec.padding)
+            assert_close(plan_t.apply(x, packed), want)
+    finally:
+        planmod._PLANE_BYTES_MAX = old
+        plan_cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# every bucket still lowers to one launch / one wide GEMM
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b", BATCH_BUCKETS)
+def test_xla_bucket_lowers_to_one_dot_general(b):
+    plan = plan_conv(dilated_spec())
+    assert plan.route_for_batch(b).path == "fused_tap"
+    x = jnp.zeros((b, 16, 16, 8), jnp.float32)
+    packed = jnp.zeros((9 * 8, 8), jnp.float32)
+    jaxpr = jax.make_jaxpr(plan.apply)(x, packed)
+    assert count_eqns(jaxpr.jaxpr, "dot_general") == 1
+    assert count_eqns(jaxpr.jaxpr, "conv_general_dilated") == 0
+
+
+@pytest.mark.parametrize("b", BATCH_BUCKETS)
+def test_pallas_bucket_lowers_to_one_launch(b):
+    plan = plan_conv(dilated_spec(backend="pallas"))
+    route = plan.route_for_batch(b)
+    if route.path != "pallas":
+        pytest.skip("no VMEM-feasible tiling on this geometry")
+    x = jnp.zeros((b, 16, 16, 8), jnp.float32)
+    packed = jnp.zeros((9 * 8, 8), jnp.float32)
+    jaxpr = jax.make_jaxpr(plan.apply)(x, packed)
+    assert count_eqns(jaxpr.jaxpr, "pallas_call") == 1
+    assert count_eqns(jaxpr.jaxpr, "dot_general") == 0
+
+
+@pytest.mark.parametrize("b", (1, 4, 16))
+def test_transposed_bucket_parity_vs_oracle(b):
+    spec = transposed_spec()
+    plan = plan_conv(spec)
+    key = jax.random.PRNGKey(2)
+    k = jax.random.normal(key, (5, 5, spec.in_c, spec.out_c), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(b),
+                          (b, *spec.in_hw, spec.in_c), jnp.float32)
+    want = ref.oracle_conv_transpose2d(x, k, strides=spec.strides,
+                                       padding=spec.padding)
+    assert_close(plan.apply(x, plan.pack(k)), want)
+
+
+# ---------------------------------------------------------------------------
+# the executors carry no trace-time batch re-checks
+# ---------------------------------------------------------------------------
+
+def test_executors_never_touch_the_byte_cap():
+    """The cap lives in the route builders only: no executor or backward
+    re-derives a path from the traced batch (the PR-3 re-check branches
+    at _transposed_fwd/_single_fwd/_ps_bwd are gone)."""
+    for fn in (planmod._transposed_fwd, planmod._single_fwd,
+               planmod._ps_bwd, planmod._pt_bwd):
+        src = inspect.getsource(fn)
+        assert "_PLANE_BYTES_MAX" not in src, fn.__name__
+    for fn in (planmod._transposed_fwd, planmod._single_fwd,
+               planmod._ps_bwd):
+        assert "route_for_batch" in inspect.getsource(fn), fn.__name__

@@ -1,0 +1,122 @@
+"""Dynamic image batcher: bucket coalescing, deadline flush, tail padding,
+cost-aware launch planning, and the shared latency metrics."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.plan import BATCH_BUCKETS
+from repro.serving.image_batcher import DynamicImageBatcher, ImageRequest
+from repro.serving.metrics import format_stats, latency_stats
+
+
+def echo_batcher(**kw):
+    """Serve fn that tags each row with its own sum — output rows map 1:1
+    onto input rows, so request/response pairing is checkable."""
+    return DynamicImageBatcher(lambda x: x * 2.0, **kw)
+
+
+def reqs(n, dim=3):
+    return [ImageRequest(rid=i, payload=np.full((dim,), float(i), np.float32))
+            for i in range(n)]
+
+
+def test_requests_map_to_their_own_outputs():
+    b = echo_batcher()
+    done = b.run(reqs(11))
+    assert len(done) == 11
+    for r in done:
+        np.testing.assert_array_equal(r.out, np.full((3,), 2.0 * r.rid))
+        assert r.t_done is not None and r.latency_s >= 0
+
+
+def test_burst_coalesces_into_buckets_with_tail_padding():
+    b = echo_batcher()
+    b.run(reqs(11))
+    # 11 -> one bucket-16 launch (no measured costs: round-up policy)
+    assert b.launches == [(16, 11)]
+    st = b.stats()
+    assert st["completed"] == 11 and st["launches"] == 1
+    assert st["pad_fraction"] == pytest.approx(5 / 16)
+    assert st["throughput_rps"] > 0
+    assert set(st["bucket_histogram"]) == set(BATCH_BUCKETS)
+
+
+def test_pump_waits_for_deadline_then_flushes():
+    b = echo_batcher(max_wait_ms=10_000)
+    for r in reqs(2):
+        b.submit(r)
+    assert b.pump() == []                    # still coalescing
+    assert len(b.queue) == 2
+    done = b.pump(drain=True)                # deadline override
+    assert len(done) == 2 and not b.queue
+
+
+def test_zero_wait_launches_immediately():
+    b = echo_batcher(max_wait_ms=0.0)
+    b.submit(reqs(1)[0])
+    assert len(b.pump()) == 1
+
+
+def test_full_bucket_launches_before_deadline():
+    b = echo_batcher(max_wait_ms=10_000)
+    for r in reqs(BATCH_BUCKETS[-1]):
+        b.submit(r)
+    assert len(b.pump()) > 0                 # full largest bucket: go now
+
+
+def test_cost_aware_cover_minimizes_measured_cost():
+    b = echo_batcher()
+    b.bucket_cost_s = {1: 1.0, 4: 2.0, 16: 7.0, 64: 100.0}
+    b._sched_memo = {0: (0.0, 0)}
+    assert sorted(b._plan_cover(5)) == [1, 4]          # 3.0 beats pad-to-16
+    assert b._plan_cover(16) == (16,)                  # 7.0 beats 4x4 = 8.0
+    assert sorted(b._plan_cover(20)) == [4, 16]
+    assert b._first_launch_size(5) == 4                # biggest chunk first
+    # without costs: round-up-to-bucket
+    b2 = echo_batcher()
+    assert b2._first_launch_size(5) == 16
+
+
+def test_cost_aware_schedule_drives_launches():
+    b = echo_batcher()
+    b.bucket_cost_s = {1: 1.0, 4: 2.0, 16: 7.0, 64: 100.0}
+    b._sched_memo = {0: (0.0, 0)}
+    b.run(reqs(5))
+    assert b.launches == [(4, 4), (1, 1)]              # split, not pad-to-16
+
+
+def test_warmup_measures_every_bucket():
+    b = echo_batcher(buckets=(1, 4))
+    b.warmup(np.zeros((3,), np.float32))
+    assert set(b.bucket_cost_s) == {1, 4}
+    assert all(v > 0 for v in b.bucket_cost_s.values())
+
+
+def test_warmup_without_shape_raises():
+    with pytest.raises(ValueError):
+        echo_batcher().warmup()
+
+
+def test_latency_stats_shared_math():
+    lat = [0.010, 0.020, 0.030, 0.040]
+    st = latency_stats(lat, window_s=0.1)
+    assert st["completed"] == 4
+    assert st["p50_ms"] == pytest.approx(25.0)
+    assert st["p95_ms"] == pytest.approx(np.percentile(lat, 95) * 1e3)
+    assert st["throughput_rps"] == pytest.approx(40.0)
+    assert "p99" in format_stats(st)
+    empty = latency_stats([])
+    assert empty["completed"] == 0 and empty["p99_ms"] == 0.0
+
+
+def test_image_payloads_roundtrip():
+    """Segmentation-shaped (H, W, C) payloads batch just as well, and the
+    jitted fn may change the output rank (class-map outputs)."""
+    b = DynamicImageBatcher(lambda x: jnp.argmax(x, axis=-1),
+                            buckets=(1, 4))
+    rng = np.random.default_rng(0)
+    rs = [ImageRequest(rid=i, payload=rng.uniform(
+        -1, 1, (5, 5, 3)).astype(np.float32)) for i in range(3)]
+    done = b.run(rs)
+    for r in done:
+        np.testing.assert_array_equal(r.out, np.argmax(r.payload, axis=-1))

@@ -75,6 +75,30 @@ def test_resolve_logical_spec():
     assert dist.resolve(P("vocab", None)) == P("model", None)
 
 
+def test_resolve_superpack_axes():
+    """Superpacked conv weights: (conv_taps, conv_out) shards out-channels
+    by default; flipping conv_taps makes the superpack row-parallel."""
+    from repro.sharding import SUPERPACK_SPEC
+    dist = DistContext(mesh=None, rules=dict(DEFAULT_RULES))
+    assert dist.resolve(SUPERPACK_SPEC) == P(None, "model")
+    assert dist.image_spec() == P(("data",))
+    rp = dict(DEFAULT_RULES, conv_taps="model", conv_out=None)
+    assert DistContext(mesh=None, rules=rp).resolve(SUPERPACK_SPEC) \
+        == P("model", None)
+
+
+def test_planned_model_specs_use_superpack_axes():
+    """Every superpacked weight in the planned model zoos carries the
+    logical (conv_taps, conv_out) spec."""
+    from repro.models import gan, segnet, vae
+    _, s = gan.generator_init(jax.random.PRNGKey(0), gan.CGAN)
+    assert s["dc0"] == P("conv_taps", "conv_out")
+    _, s = segnet.segnet_init(jax.random.PRNGKey(0), segnet.SEGNET_TINY)
+    assert s["w0"] == P("conv_taps", "conv_out")
+    _, s = vae.vae_init(jax.random.PRNGKey(0), vae.VAE_TINY)
+    assert s["enc0"] == s["dec0"] == P("conv_taps", "conv_out")
+
+
 # ---------------------------------------------------------------------------
 # input specs
 # ---------------------------------------------------------------------------

@@ -1,0 +1,68 @@
+"""Docs tree check: markdown lint (fence balance, tab ban, trailing-space
+ban on link lines) + relative-link existence, for README.md and docs/*.md.
+
+    python tools/check_docs.py
+
+Exits non-zero listing every violation; run by the CI docs step.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)\s]*)?\)")
+
+
+def md_files():
+    return [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    errs = []
+    text = path.read_text(encoding="utf-8")
+    rel = path.relative_to(ROOT)
+
+    if text.count("```") % 2 != 0:
+        errs.append(f"{rel}: unbalanced code fences")
+    for i, line in enumerate(text.splitlines(), 1):
+        if "\t" in line:
+            errs.append(f"{rel}:{i}: literal tab")
+
+    # relative links must resolve (http(s) and mailto are out of scope)
+    in_fence = False
+    for i, line in enumerate(text.splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        matches = list(LINK_RE.finditer(line))
+        if matches and line != line.rstrip():
+            errs.append(f"{rel}:{i}: trailing whitespace on link line")
+        for m in matches:
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if not (path.parent / target).resolve().exists():
+                errs.append(f"{rel}:{i}: broken link -> {target}")
+    return errs
+
+
+def main() -> int:
+    errs = []
+    for f in md_files():
+        if not f.exists():
+            errs.append(f"missing required doc: {f.relative_to(ROOT)}")
+            continue
+        errs.extend(check_file(f))
+    for e in errs:
+        print(e)
+    if not errs:
+        print(f"docs OK: {len(md_files())} files, all links resolve")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
