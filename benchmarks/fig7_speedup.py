@@ -28,7 +28,8 @@ import json
 import jax
 import jax.numpy as jnp
 
-from benchmarks.util import csv_row, geomean as geo_mean, time_fn
+from benchmarks.util import (csv_row, geomean as geo_mean,
+                             pallas_tiled_record, time_fn)
 from repro.core import huge_conv_transpose2d
 from repro.core import reference as ref
 from repro.core.plan import ConvSpec, plan_conv
@@ -54,6 +55,12 @@ def bench_layer(l, backend="xla", iters=10, warmup=3):
         backend=backend))
     packed = jax.block_until_ready(plan.pack(k))                 # offline
     w_flat = k.reshape(l.kernel * l.kernel * l.in_c, l.out_c)    # offline
+    # the pallas_tiled column: the same site planned under backend='pallas'
+    # (whole-plane or spatially tiled route; timed on TPU hosts only)
+    plan_p = plan_conv(ConvSpec(
+        kind="transposed", in_hw=(l.in_hw, l.in_hw), in_c=l.in_c,
+        out_c=l.out_c, kernel_hw=khw, strides=strides, padding=pad,
+        backend="pallas"))
 
     naive = jax.jit(functools.partial(ref.naive_conv_transpose2d_pre,
                                       kernel_hw=khw, strides=strides,
@@ -75,6 +82,9 @@ def bench_layer(l, backend="xla", iters=10, warmup=3):
                                np.asarray(want), rtol=2e-4, atol=2e-4)
     return {
         "path": plan.path,
+        "pallas_tiled": pallas_tiled_record(
+            plan_p, apply_fn=plan_p.apply, args=(x, packed),
+            iters=iters, warmup=warmup),
         "naive_us": time_fn(naive, x, w_flat, iters=iters, warmup=warmup) * 1e6,
         "planned_us": time_fn(planned, x, packed, iters=iters,
                               warmup=warmup) * 1e6,
@@ -101,6 +111,7 @@ def main(print_csv=True, quick=False, json_path=JSON_PATH):
             rec["fused_vs_per_phase"] = t["per_phase_us"] / t["planned_us"]
             rec["plan_gain"] = t["unplanned_us"] / t["planned_us"]
             records.append(rec)
+            pt = t["pallas_tiled"]
             rows.append(csv_row(
                 rec["name"], t["planned_us"],
                 f"naive_us={t['naive_us']:.1f} "
@@ -108,6 +119,9 @@ def main(print_csv=True, quick=False, json_path=JSON_PATH):
                 f"per_phase_us={t['per_phase_us']:.1f} "
                 f"fused_vs_per_phase={rec['fused_vs_per_phase']:.2f}x "
                 f"path={t['path']} "
+                f"pallas_tiled={pt['path']}"
+                + (f"@sp{tuple(pt['sp_tiles'])}" if pt["tiled"] else "")
+                + " "
                 f"unplanned_us={t['unplanned_us']:.1f} "
                 f"plan_gain={rec['plan_gain']:.2f}x"))
     dc = [r["fused_vs_per_phase"] for r in records if r["gan"] == "DCGAN"]

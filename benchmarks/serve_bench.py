@@ -78,6 +78,27 @@ def serve_dynamic(batcher, z_dim, trace, rng) -> dict:
     return batcher.stats()
 
 
+def pallas_route_table(cfg) -> list:
+    """The ``pallas_tiled`` column for the served model: every generator
+    conv site's per-bucket route under backend='pallas'.  Proves the big
+    buckets (the B=64 launch the batcher coalesces into) stay on the Pallas
+    route — whole-plane where it fits, spatially tiled where it doesn't —
+    instead of degrading to 'taps'."""
+    import dataclasses
+    table = []
+    for i, plan in enumerate(gan.generator_plans(cfg)):
+        plan_p = gan.plan_conv(dataclasses.replace(plan.spec,
+                                                   backend="pallas"))
+        table.append({
+            "layer": i + 1,
+            "routes": [{"batch": r.batch, "path": r.path,
+                        "tiles": list(r.tiles) if r.tiles else None,
+                        "sp_tiles": list(r.sp_tiles) if r.sp_tiles else None}
+                       for r in plan_p.routes],
+        })
+    return table
+
+
 def main(print_csv=True, quick=False, json_path=JSON_PATH):
     repeats = 2 if quick else 4
     cfg = gan.CGAN
@@ -112,6 +133,7 @@ def main(print_csv=True, quick=False, json_path=JSON_PATH):
         "trace": {"bursts": len(trace), "sizes": trace},
         "buckets": list(batcher.buckets),
         "bucket_cost_ms": bucket_cost,
+        "pallas_tiled": pallas_route_table(cfg),
         "fixed": best_fixed,
         "dynamic": best_dyn,
         "throughput_ratio":

@@ -42,3 +42,32 @@ def geomean(vals) -> float:
     JSON-emitting benches)."""
     vals = list(vals)
     return float(np.exp(np.mean(np.log(vals))))
+
+
+def pallas_tiled_record(plan_pallas, apply_fn=None, args=(),
+                        iters: int = 5, warmup: int = 2) -> dict:
+    """The shared ``pallas_tiled`` bench column: what the site's
+    backend='pallas' plan routes to at the benched batch (taken from
+    ``args`` so the verdict always describes the same launch any timing
+    measures; B=1 when no inputs are given).
+
+    ``tiled`` is True when the route is the spatially tiled kernel
+    (``sp_tiles`` set) — i.e. a geometry the whole-plane verdict used to
+    bounce off the Pallas route.  ``pallas_us`` is wall-clock **only on a
+    real TPU backend**; on CPU hosts Pallas runs in interpret mode, whose
+    timing says nothing about the kernel, so the column records the route
+    verdict and leaves ``pallas_us`` null (docs/BENCHMARKS.md spells this
+    out)."""
+    batch = int(args[0].shape[0]) if args else 1
+    route = plan_pallas.route_for_batch(batch)
+    rec = {
+        "path": route.path,
+        "tiles": list(route.tiles) if route.tiles else None,
+        "sp_tiles": list(route.sp_tiles) if route.sp_tiles else None,
+        "tiled": route.sp_tiles is not None,
+        "pallas_us": None,
+    }
+    if apply_fn is not None and jax.default_backend() == "tpu":
+        rec["pallas_us"] = time_fn(jax.jit(apply_fn), *args, iters=iters,
+                                   warmup=warmup) * 1e6
+    return rec

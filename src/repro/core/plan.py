@@ -39,7 +39,13 @@ residency of the input):
 * ``pallas``      — one multi-phase Pallas kernel: the globally padded plane
   resident in VMEM once, a static unrolled loop over every phase's taps
   accumulating into per-phase f32 scratch, and a flush that writes the
-  *interleaved* output block directly with strided in-kernel stores.
+  *interleaved* output block directly with strided in-kernel stores.  When
+  the whole plane does not fit VMEM, the same launch runs the **spatially
+  tiled** grid instead (``Route.sp_tiles``): halo'd output tiles with
+  double-buffered input DMA — the 'pallas' verdict is a *tile*-fits check,
+  so plane size never forces a site off the Pallas route (the XLA
+  fallbacks below remain for non-uniform-phase transposed shapes, and
+  for the pathological case of a minimum halo tile over the budget).
 * ``fused_tap``   — one wide XLA GEMM: all tap-shifted views of the resident
   plane stacked against the superpack reshaped ``(ΣT, C, N)``, per-phase
   tap-segment sums, one reshape-interleave.  Exact FLOPs; wins when the
@@ -62,7 +68,9 @@ kernel is never zero-inserted; taps read the raw plane at ``m·d_h`` /
   plane resident in VMEM, a static unrolled tap loop accumulating into f32
   scratch, tiles picked at plan time from the dilation-aware working set
   (the plane grows by the dilated tap reach ``(R-1)·d_h``; the superpack
-  tile does not — taps are R·S rows regardless of dilation).
+  tile does not — taps are R·S rows regardless of dilation).  Big planes
+  run the spatially tiled grid (``Route.sp_tiles``, halo'd output tiles +
+  double-buffered input DMA) under the same single launch.
 * ``fused_tap``   — ONE wide XLA GEMM: the R·S tap-shifted (strided,
   dilated) views of the resident plane concatenated along channels against
   the full ``(R·S·C, N)`` superpack.  Exact FLOPs (the buffer is built from
@@ -175,6 +183,64 @@ def pick_fused_tiles(hg, wg, c, n, total_taps, sum_uv, oh, ow, itemsize):
     return None
 
 
+def _spatial_cands(extent: int) -> tuple[int, ...]:
+    """Output-tile size candidates along one dim, descending, clipped."""
+    return tuple(dict.fromkeys(min(t, extent) for t in (128, 64, 32, 16, 8)))
+
+
+def pick_tiled_single(c, n, r, s, oh, ow, strides, dilation, itemsize):
+    """(C_t, N_t, (T_oh, T_ow)) for the spatially tiled single-correlation
+    kernel, or None.  N tiles are maximized *first*: every N-tile revisit
+    re-streams the full halo'd C range of the tile (total halo DMA per
+    plane is ∝ N/N_t and independent of C_t), so a big N_t minimizes DMA
+    traffic; then the largest C_t (fewer accumulator carries, fatter MXU
+    contractions), then the largest output tile whose double-buffered
+    working set (``vmem_bytes_estimate_tiled``) fits the budget."""
+    from repro.kernels.untangled_conv import (halo_extent,
+                                              vmem_bytes_estimate_tiled)
+    (sh, sw), (dh, dw) = strides, dilation
+    for n_t in (256, 128, 64, 32, 16, 8):
+        for c_t in (256, 128, 64, 32, 16, 8):
+            if c_t > max(c, 8) * 2 or n_t > max(n, 8) * 2:
+                continue
+            for toh in _spatial_cands(oh):
+                for tow in _spatial_cands(ow):
+                    tin_h = halo_extent(toh, r, sh, dh)
+                    tin_w = halo_extent(tow, s, sw, dw)
+                    if vmem_bytes_estimate_tiled(
+                            tin_h, tin_w, min(c_t, c), r * s, min(n_t, n),
+                            toh * tow, itemsize) <= _VMEM_BUDGET:
+                        return min(c_t, c), min(n_t, n), (toh, tow)
+    return None
+
+
+def pick_tiled_transposed(c, n, total_taps, phases, itemsize):
+    """(C_t, N_t, (T_u, T_v)) for the spatially tiled multi-phase deconv
+    kernel, or None.  Tile sizes are in *phase-output* coordinates (the
+    interleaved output tile is (T_u·s_h, T_v·s_w)); the halo covers the
+    phase tap-origin span, so it is phase-aware by construction.  Search
+    order as in ``pick_tiled_single``: N_t (DMA), then C_t, then space.
+    Only uniform-phase plans call this (checked by the route builder)."""
+    from repro.kernels.untangled_conv import (deconv_tap_span,
+                                              vmem_bytes_estimate_tiled)
+    uu, vv = phases[0].out_hw
+    ((mh, xh_max), (mw, xw_max)) = deconv_tap_span(phases)
+    for n_t in (256, 128, 64, 32, 16, 8):
+        for c_t in (256, 128, 64, 32, 16, 8):
+            if c_t > max(c, 8) * 2 or n_t > max(n, 8) * 2:
+                continue
+            for tu in _spatial_cands(uu):
+                for tv in _spatial_cands(vv):
+                    tin_h = xh_max - mh + tu
+                    tin_w = xw_max - mw + tv
+                    if vmem_bytes_estimate_tiled(
+                            tin_h, tin_w, min(c_t, c), total_taps,
+                            min(n_t, n), len(phases) * tu * tv,
+                            itemsize) <= _VMEM_BUDGET:
+                        return min(c_t, c), min(n_t, n), (tu, tv)
+    return None
+
+
 # ---------------------------------------------------------------------------
 # spec
 # ---------------------------------------------------------------------------
@@ -264,12 +330,19 @@ class Route:
     ``tiles`` are the whole-conv forward route for that bucket, and
     ``fused_bwd`` says whether the single-correlation backward may
     materialize its ``(B, OH, OW, ΣT, ·)`` f32 buffers (one wide dy GEMM +
-    one stacked dK GEMM) or must fall back to per-tap GEMMs."""
+    one stacked dK GEMM) or must fall back to per-tap GEMMs.
+
+    ``sp_tiles`` is the spatial output-tile shape when the 'pallas' route is
+    the *tiled* kernel — ``(T_oh, T_ow)`` output pixels for the single-
+    correlation kinds, ``(T_u, T_v)`` phase-output pixels for the transposed
+    kind (the interleaved tile is ``(T_u·s_h, T_v·s_w)``).  ``None`` means
+    whole-plane VMEM residency (the small-plane fast path)."""
 
     batch: int
     path: str                     # 'pallas'|'fused_plane'|'fused_tap'|'taps'
     tiles: Pair | None            # (C_t, N_t) when path == 'pallas'
     fused_bwd: bool = True
+    sp_tiles: Pair | None = None  # spatial tile when 'pallas' is tiled
 
 
 def _single_route(spec: ConvSpec, hp: int, wp: int, out_hw: Pair,
@@ -297,9 +370,19 @@ def _single_route(spec: ConvSpec, hp: int, wp: int, out_hw: Pair,
     want_pallas = spec.backend == "pallas" or (
         spec.backend == "auto" and jax.default_backend() == "tpu")
     if want_pallas:
+        # the 'pallas' verdict is a *tile*-fits check: whole-plane residency
+        # when it fits (no halo waste), else spatial output tiling — plane
+        # size alone never pushes a site off the Pallas route
         tiles = pick_vmem_tiles(hp, wp, c, n, r, s, oh, ow, itemsize)
         if tiles is not None:
             return Route(batch, "pallas", tiles, fused_bwd=fused_ok)
+        dil = spec.dilation if spec.kind == "dilated" else (1, 1)
+        tiled = pick_tiled_single(c, n, r, s, oh, ow, spec.strides, dil,
+                                  itemsize)
+        if tiled is not None:
+            c_t, n_t, sp = tiled
+            return Route(batch, "pallas", (c_t, n_t), fused_bwd=fused_ok,
+                         sp_tiles=sp)
     if fused_ok:
         return Route(batch, "fused_tap", None, fused_bwd=True)
     return Route(batch, "taps", None, fused_bwd=False)
@@ -307,7 +390,8 @@ def _single_route(spec: ConvSpec, hp: int, wp: int, out_hw: Pair,
 
 def _transposed_route(spec: ConvSpec, hg: int, wg: int, out_hw: Pair,
                       total_taps: int, sum_uv: int, sum_uvt: int,
-                      uniform: bool, itemsize: int, batch: int) -> Route:
+                      uniform: bool, phases, itemsize: int,
+                      batch: int) -> Route:
     """Whole-conv route for the transposed kind at one batch bucket: one
     launch / one wide GEMM, the plane-GEMM intermediate capped at the
     bucket's size."""
@@ -323,6 +407,13 @@ def _transposed_route(spec: ConvSpec, hg: int, wg: int, out_hw: Pair,
                                  itemsize)
         if tiles is not None:
             return Route(batch, "pallas", tiles)
+        # big planes: spatially tiled kernel (uniform phases — equivalently
+        # out % stride == 0 — so the interleaved output tiles block cleanly)
+        if uniform and oh % spec.strides[0] == 0 and ow % spec.strides[1] == 0:
+            tiled = pick_tiled_transposed(c, n, total_taps, phases, itemsize)
+            if tiled is not None:
+                c_t, n_t, sp = tiled
+                return Route(batch, "pallas", (c_t, n_t), sp_tiles=sp)
     plane_ratio = hg * wg * total_taps / max(1, sum_uvt)
     plane_bytes = 4 * batch * hg * wg * total_taps * n
     if plane_ratio <= _PLANE_RATIO_MAX and plane_bytes <= _PLANE_BYTES_MAX:
@@ -344,7 +435,7 @@ def _route_exact(plan: "ConvPlan", batch: int) -> Route:
                       for ex in plan.phases)
         return _transposed_route(
             spec, h + glh + ghh, w + glw + ghw, plan.out_hw, plan.total_taps,
-            plan.sum_uv, sum_uvt, plan.uniform, itemsize, batch)
+            plan.sum_uv, sum_uvt, plan.uniform, plan.phases, itemsize, batch)
     (ph, pw) = spec.padding
     return _single_route(spec, h + ph[0] + ph[1], w + pw[0] + pw[1],
                          plan.out_hw, itemsize, batch)
@@ -548,7 +639,7 @@ def plan_conv(spec: ConvSpec) -> ConvPlan:
         uniform = len({ex.out_hw for ex in phases}) == 1
         routes = tuple(_transposed_route(
             spec, hg, wg, (oh, ow), total_taps, sum_uv, sum_uvt, uniform,
-            itemsize, bb) for bb in BATCH_BUCKETS)
+            tuple(phases), itemsize, bb) for bb in BATCH_BUCKETS)
         # dx schedule (strided-conv form): tap (m, n) of the flipped/swapped
         # kernel reads full-kernel tap (r-1-m, s-1-n), which lives in phase
         # ((pl-r') % s) at superpack row tap_off + r'//s (tap units).
@@ -777,7 +868,7 @@ def _transposed_fwd(plan: ConvPlan, x, packed, interpret=None):
             xg, packed, phases=plan.phases, out_hw=plan.out_hw,
             strides=spec.strides, sum_uv=plan.sum_uv,
             c_tile=route.tiles[0], n_tile=route.tiles[1],
-            out_dtype=x.dtype, interpret=interpret)
+            sp_tiles=route.sp_tiles, out_dtype=x.dtype, interpret=interpret)
     elif path in ("fused_tap", "fused_plane"):
         fwd = _fused_tap_fwd if path == "fused_tap" else _fused_plane_fwd
         outs = fwd(plan, xg, packed)
@@ -856,7 +947,8 @@ def _single_fwd(plan: ConvPlan, x, packed, interpret=None):
         y = untangled_conv2d_superpack_pallas(
             xp, packed, taps_hw=(r, s), strides=strides,
             rhs_dilation=dilation, c_tile=route.tiles[0],
-            n_tile=route.tiles[1], out_dtype=x.dtype, interpret=interpret)
+            n_tile=route.tiles[1], sp_tiles=route.sp_tiles,
+            out_dtype=x.dtype, interpret=interpret)
     elif path == "fused_tap":
         # ONE wide GEMM: tap views concatenated channel-major in superpack
         # row order against the whole (R·S·C, N) buffer.  Exact FLOPs.

@@ -31,6 +31,21 @@ no per-phase launches, no per-phase input copies, no stack/transpose
 interleave pass.
 
 Grid: ``(B, N/N_t, C/C_t)`` — C innermost (reduction).
+
+**Spatially tiled variants** (``sp_tiles`` on both public entries): when the
+whole padded plane does not fit VMEM, the grid grows ``(oh_tiles, ow_tiles)``
+axes — ``(B, OH/T_oh, OW/T_ow, N/N_t, C/C_t)``, C still innermost — and the
+kernel computes one **halo'd output tile** per step.  The input stays whole
+in ``pltpu.ANY`` (compiler-placed, HBM for big planes) and each step's
+halo'd input slice — output-tile footprint plus the stride/dilation-aware
+tap reach ``(T-1)·d`` (phase-aware tap-origin span for the multi-phase
+deconv) — is fetched by an explicit **double-buffered DMA**: the next
+step's halo slice streams into the other slot while the MXU runs the
+current tap loop.  Per-output-pixel accumulation order (tap-major inside a
+C tile, C tiles outer) is identical to the whole-plane kernels, so tiled
+and untiled outputs are bit-compatible.  Plane size alone never pushes a
+site off the Pallas route (the plan layer keeps XLA fallbacks only for
+non-uniform-phase transposed shapes and halos beyond the VMEM budget).
 """
 from __future__ import annotations
 
@@ -80,11 +95,99 @@ def _kernel(x_ref, k_ref, o_ref, acc_ref, *, taps_hw: Pair, strides: Pair,
         o_ref[0] = acc.reshape(oh, ow, acc.shape[-1]).astype(o_ref.dtype)
 
 
+def _halo_stream(x_any, buf, sem, origin):
+    """Double-buffered halo'd-tile fetch shared by both tiled kernels.
+
+    ``origin(i, j)`` maps a spatial tile index to the slice origin (rows,
+    cols) inside the ``pltpu.ANY``-resident plane; the channel slice comes
+    from the innermost grid axis.  Ravels the ``(b, i, j, n, c)`` grid into
+    a linear step (the halo slice depends on everything but the N tile),
+    starts the *next* step's DMA into the other slot so it streams while
+    the caller's MXU loop runs, then waits on and returns the current
+    step's tile (a ``(tin_h, tin_w, C_t)`` VMEM view)."""
+    bi, oi, oj, ni, ci = (pl.program_id(d) for d in range(5))
+    nb, n_oi, n_oj, nn, nc = (pl.num_programs(d) for d in range(5))
+    step = (((bi * n_oi + oi) * n_oj + oj) * nn + ni) * nc + ci
+    total = nb * n_oi * n_oj * nn * nc
+    _, tin_h, tin_w, c_t = buf.shape
+
+    def tile_dma(slot, st):
+        c_ = jax.lax.rem(st, nc)
+        st = jax.lax.div(st, nc * nn)
+        j_ = jax.lax.rem(st, n_oj)
+        st = jax.lax.div(st, n_oj)
+        i_ = jax.lax.rem(st, n_oi)
+        b_ = jax.lax.div(st, n_oi)
+        r0, c0 = origin(i_, j_)
+        return pltpu.make_async_copy(
+            x_any.at[b_, pl.ds(r0, tin_h), pl.ds(c0, tin_w),
+                     pl.ds(c_ * c_t, c_t)],
+            buf.at[slot], sem.at[slot])
+
+    slot = jax.lax.rem(step, 2)
+
+    @pl.when(step == 0)
+    def _warmup():
+        tile_dma(0, 0).start()
+
+    @pl.when(step + 1 < total)
+    def _prefetch():                    # streams while the MXU loop runs
+        tile_dma(jax.lax.rem(step + 1, 2), step + 1).start()
+
+    tile_dma(slot, step).wait()
+    return buf[slot]
+
+
+def _tiled_kernel(x_any, k_ref, o_ref, buf, sem, acc_ref, *, taps_hw: Pair,
+                  strides: Pair, dilation: Pair, tile_hw: Pair,
+                  n_c_tiles: int):
+    """Spatially tiled single-correlation kernel: one halo'd output tile per
+    grid step, the input whole in ``pltpu.ANY`` and each step's halo slice
+    DMA'd into a double-buffered VMEM scratch (the next slice streams while
+    the MXU runs the current tap loop).  Tap/C-tile accumulation order is
+    identical to ``_kernel``, so the output is bit-compatible with the
+    whole-plane route."""
+    r, s = taps_hw
+    sh, sw = strides
+    dh, dw = dilation
+    toh, tow = tile_hw
+    ci = pl.program_id(4)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = _halo_stream(x_any, buf, sem,
+                     lambda i_, j_: (i_ * toh * sh, j_ * tow * sw))
+    acc = acc_ref[...]
+    for m in range(r):                  # static tap unroll -> MXU matmuls
+        for n in range(s):
+            xs = jax.lax.slice(
+                x, (m * dh, n * dw, 0),
+                (m * dh + (toh - 1) * sh + 1, n * dw + (tow - 1) * sw + 1,
+                 x.shape[2]),
+                (sh, sw, 1))
+            acc += jnp.dot(xs.reshape(toh * tow, xs.shape[2]), k_ref[m * s + n],
+                           preferred_element_type=jnp.float32)
+    acc_ref[...] = acc
+
+    @pl.when(ci == n_c_tiles - 1)
+    def _flush():
+        o_ref[0] = acc.reshape(toh, tow, acc.shape[-1]).astype(o_ref.dtype)
+
+
+def halo_extent(tile: int, taps: int, stride: int, dilation: int) -> int:
+    """Input rows one halo'd output tile needs along one dim: the strided
+    tile footprint plus the dilated tap reach ``(T-1)·d``."""
+    return (tile - 1) * stride + (taps - 1) * dilation + 1
+
+
 def untangled_conv2d_superpack_pallas(x: jax.Array, superpack: jax.Array, *,
                                       taps_hw: Pair,
                                       strides: Pair = (1, 1),
                                       rhs_dilation: Pair = (1, 1),
                                       c_tile: int = 128, n_tile: int = 128,
+                                      sp_tiles: Pair | None = None,
                                       out_dtype=None,
                                       interpret: bool | None = None
                                       ) -> jax.Array:
@@ -92,7 +195,9 @@ def untangled_conv2d_superpack_pallas(x: jax.Array, superpack: jax.Array, *,
     the superpacked layout.  x:(B,Hp,Wp,C); superpack:(R·S·C, N) tap-major
     (``ConvPlan.pack``).  Covers the strided and the dilated kind — the
     dilated kernel is never zero-inserted; taps read the raw plane at
-    ``m·d_h`` / ``n·d_w`` offsets."""
+    ``m·d_h`` / ``n·d_w`` offsets.  ``sp_tiles=(T_oh, T_ow)`` selects the
+    spatially tiled grid (halo'd output tiles, double-buffered input DMA)
+    instead of whole-plane VMEM residency."""
     b, hp, wp, c = x.shape
     r, s = taps_hw
     n = superpack.shape[1]
@@ -105,6 +210,12 @@ def untangled_conv2d_superpack_pallas(x: jax.Array, superpack: jax.Array, *,
     out_dtype = out_dtype or x.dtype
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
+    if sp_tiles is not None:
+        return _conv_superpack_tiled(
+            x, superpack, taps_hw=taps_hw, strides=strides,
+            rhs_dilation=rhs_dilation, c_tile=c_tile, n_tile=n_tile,
+            sp_tiles=sp_tiles, out_hw=(oh, ow), out_dtype=out_dtype,
+            interpret=interpret)
 
     k3 = superpack.reshape(r * s, c, n)
     c_tile = min(c_tile, c)
@@ -136,6 +247,63 @@ def untangled_conv2d_superpack_pallas(x: jax.Array, superpack: jax.Array, *,
         interpret=interpret,
     )(x, k3)
     return out[..., :n]
+
+
+def _conv_superpack_tiled(x, superpack, *, taps_hw, strides, rhs_dilation,
+                          c_tile, n_tile, sp_tiles, out_hw, out_dtype,
+                          interpret):
+    """Spatially tiled grid for the single-correlation superpack kernel:
+    ``(B, OH/T_oh, OW/T_ow, N/N_t, C/C_t)``, C innermost."""
+    b, hp, wp, c = x.shape
+    r, s = taps_hw
+    n = superpack.shape[1]
+    sh, sw = strides
+    dh, dw = rhs_dilation
+    oh, ow = out_hw
+    toh, tow = min(sp_tiles[0], oh), min(sp_tiles[1], ow)
+    n_oi, n_oj = -(-oh // toh), -(-ow // tow)
+    tin_h = halo_extent(toh, r, sh, dh)
+    tin_w = halo_extent(tow, s, sw, dw)
+    # grow the plane so every tile's halo read (incl. the ragged edge) is in
+    # bounds; the zero rows only feed output pixels that are sliced off
+    hp_need = (n_oi - 1) * toh * sh + tin_h
+    wp_need = (n_oj - 1) * tow * sw + tin_w
+    k3 = superpack.reshape(r * s, c, n)
+    c_tile = min(c_tile, c)
+    n_tile = min(n_tile, n)
+    cp = -(-c // c_tile) * c_tile
+    np_ = -(-n // n_tile) * n_tile
+    pads = ((0, 0), (0, max(0, hp_need - hp)), (0, max(0, wp_need - wp)),
+            (0, cp - c))
+    if any(p != (0, 0) for p in pads):
+        x = jnp.pad(x, pads)
+    if cp != c:
+        k3 = jnp.pad(k3, ((0, 0), (0, cp - c), (0, 0)))
+    if np_ != n:
+        k3 = jnp.pad(k3, ((0, 0), (0, 0), (0, np_ - n)))
+    n_c_tiles = cp // c_tile
+
+    grid = (b, n_oi, n_oj, np_ // n_tile, n_c_tiles)
+    out = pl.pallas_call(
+        functools.partial(_tiled_kernel, taps_hw=(r, s), strides=strides,
+                          dilation=rhs_dilation, tile_hw=(toh, tow),
+                          n_c_tiles=n_c_tiles),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((r * s, c_tile, n_tile),
+                         lambda b_, i_, j_, n_, c_: (0, c_, n_)),
+        ],
+        out_specs=pl.BlockSpec((1, toh, tow, n_tile),
+                               lambda b_, i_, j_, n_, c_: (b_, i_, j_, n_)),
+        out_shape=jax.ShapeDtypeStruct((b, n_oi * toh, n_oj * tow, np_),
+                                       out_dtype),
+        scratch_shapes=[pltpu.VMEM((2, tin_h, tin_w, c_tile), x.dtype),
+                        pltpu.SemaphoreType.DMA((2,)),
+                        pltpu.VMEM((toh * tow, n_tile), jnp.float32)],
+        interpret=interpret,
+    )(x, k3)
+    return out[:, :oh, :ow, :n]
 
 
 def untangled_conv2d_pallas(x: jax.Array, kernel: jax.Array, *,
@@ -199,7 +367,8 @@ def _deconv_kernel(x_ref, k_ref, o_ref, acc_ref, *, phases, strides: Pair,
 def untangled_deconv2d_pallas(xg: jax.Array, superpack: jax.Array, *,
                               phases, out_hw: Pair, strides: Pair,
                               sum_uv: int, c_tile: int = 128,
-                              n_tile: int = 128, out_dtype=None,
+                              n_tile: int = 128,
+                              sp_tiles: Pair | None = None, out_dtype=None,
                               interpret: bool | None = None) -> jax.Array:
     """Fused transposed conv: ONE kernel launch for all s_h*s_w phases.
 
@@ -207,6 +376,9 @@ def untangled_deconv2d_pallas(xg: jax.Array, superpack: jax.Array, *,
     phase sub-kernels (``ConvPlan.pack`` layout); ``phases`` the plan's
     ``PhaseExec`` records.  Output (B, out_h, out_w, N), written interleaved
     inside the kernel — no stack/transpose pass afterwards.
+    ``sp_tiles=(T_u, T_v)`` (phase-output coordinates; uniform phases only)
+    selects the spatially tiled grid with halo'd, double-buffered input
+    slices instead of whole-plane VMEM residency.
     """
     b, hg, wg, c = xg.shape
     n = superpack.shape[1]
@@ -215,6 +387,11 @@ def untangled_deconv2d_pallas(xg: jax.Array, superpack: jax.Array, *,
     out_dtype = out_dtype or xg.dtype
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
+    if sp_tiles is not None:
+        return _deconv_tiled(xg, superpack, phases=phases, out_hw=out_hw,
+                             strides=strides, c_tile=c_tile, n_tile=n_tile,
+                             sp_tiles=sp_tiles, out_dtype=out_dtype,
+                             interpret=interpret)
 
     k3 = superpack.reshape(total_taps, c, n)
     c_tile = min(c_tile, c)
@@ -251,6 +428,123 @@ def untangled_deconv2d_pallas(xg: jax.Array, superpack: jax.Array, *,
     return out[..., :n]
 
 
+def deconv_tap_span(phases) -> tuple[Pair, Pair]:
+    """((min_h, max_h), (min_w, max_w)) tap-origin span over the non-empty
+    phases: phase q's taps read the padded plane at rows ``xoff_h + t_i + u``
+    — the halo'd tile must cover every phase's origin, so its extent along
+    one dim is ``(max - min) + T_u`` (the phase-aware halo)."""
+    live = [ex for ex in phases if ex.taps[0] * ex.taps[1] > 0]
+    assert live, "deconv_tap_span needs at least one non-empty phase"
+    min_h = min(ex.xoff[0] for ex in live)
+    max_h = max(ex.xoff[0] + ex.taps[0] - 1 for ex in live)
+    min_w = min(ex.xoff[1] for ex in live)
+    max_w = max(ex.xoff[1] + ex.taps[1] - 1 for ex in live)
+    return ((min_h, max_h), (min_w, max_w))
+
+
+def _deconv_tiled_kernel(x_any, k_ref, o_ref, buf, sem, acc_ref, *, phases,
+                         strides: Pair, tile_uv: Pair, min_off: Pair,
+                         n_c_tiles: int):
+    """Spatially tiled multi-phase transposed conv: one interleaved output
+    tile of (T_u·s_h, T_v·s_w) pixels per grid step.  ``phases`` is a static
+    tuple ``(q_h, q_w, tap_off, T_h, T_w, xoff_h, xoff_w)``; every phase's
+    taps read the one double-buffered halo'd input tile at plan-time offsets
+    relative to the phase-origin span ``min_off``."""
+    sh, sw = strides
+    tu, tv = tile_uv
+    mh, mw = min_off
+    ci = pl.program_id(4)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = _halo_stream(x_any, buf, sem,
+                     lambda i_, j_: (i_ * tu + mh, j_ * tv + mw))
+    for pi, (qh, qw, tap_off, th, tw, xh, xw) in enumerate(phases):
+        if th * tw == 0:
+            continue                    # empty phase: its acc stays zero
+        acc = acc_ref[pl.ds(pi * tu * tv, tu * tv), :]
+        for t in range(th * tw):        # static tap unroll -> MXU matmuls
+            ti, tj = divmod(t, tw)
+            xs = jax.lax.slice(x, (xh - mh + ti, xw - mw + tj, 0),
+                               (xh - mh + ti + tu, xw - mw + tj + tv,
+                                x.shape[2]))
+            acc += jnp.dot(xs.reshape(tu * tv, xs.shape[2]),
+                           k_ref[tap_off + t],
+                           preferred_element_type=jnp.float32)
+        acc_ref[pl.ds(pi * tu * tv, tu * tv), :] = acc
+
+    @pl.when(ci == n_c_tiles - 1)
+    def _flush():
+        for pi, (qh, qw, *_rest) in enumerate(phases):
+            blk = acc_ref[pl.ds(pi * tu * tv, tu * tv), :]
+            o_ref[0, pl.Slice(qh, tu, sh), pl.Slice(qw, tv, sw), :] = (
+                blk.reshape(tu, tv, blk.shape[-1]).astype(o_ref.dtype))
+
+
+def _deconv_tiled(xg, superpack, *, phases, out_hw, strides, c_tile, n_tile,
+                  sp_tiles, out_dtype, interpret):
+    """Spatially tiled grid for the multi-phase deconv kernel:
+    ``(B, U/T_u, V/T_v, N/N_t, C/C_t)``, C innermost.  Requires uniform
+    phases (all share (U, V) — equivalently ``out % stride == 0``)."""
+    b, hg, wg, c = xg.shape
+    n = superpack.shape[1]
+    total_taps = superpack.shape[0] // max(1, c)
+    sh, sw = strides
+    oh, ow = out_hw
+    uu, vv = phases[0].out_hw
+    assert all(ex.out_hw == (uu, vv) for ex in phases), \
+        "sp_tiles requires uniform phases"
+    assert uu * sh == oh and vv * sw == ow, (out_hw, (uu, vv), strides)
+    tu, tv = min(sp_tiles[0], uu), min(sp_tiles[1], vv)
+    n_oi, n_oj = -(-uu // tu), -(-vv // tv)
+    ((mh, xh_max), (mw, xw_max)) = deconv_tap_span(phases)
+    tin_h = xh_max - mh + tu
+    tin_w = xw_max - mw + tv
+    hg_need = mh + (n_oi - 1) * tu + tin_h
+    wg_need = mw + (n_oj - 1) * tv + tin_w
+    k3 = superpack.reshape(total_taps, c, n)
+    c_tile = min(c_tile, c)
+    n_tile = min(n_tile, n)
+    cp = -(-c // c_tile) * c_tile
+    np_ = -(-n // n_tile) * n_tile
+    pads = ((0, 0), (0, max(0, hg_need - hg)), (0, max(0, wg_need - wg)),
+            (0, cp - c))
+    if any(p != (0, 0) for p in pads):
+        xg = jnp.pad(xg, pads)
+    if cp != c:
+        k3 = jnp.pad(k3, ((0, 0), (0, cp - c), (0, 0)))
+    if np_ != n:
+        k3 = jnp.pad(k3, ((0, 0), (0, 0), (0, np_ - n)))
+    n_c_tiles = cp // c_tile
+
+    meta = tuple((ex.q[0], ex.q[1], ex.tap_off, ex.taps[0], ex.taps[1],
+                  ex.xoff[0], ex.xoff[1]) for ex in phases)
+    grid = (b, n_oi, n_oj, np_ // n_tile, n_c_tiles)
+    out = pl.pallas_call(
+        functools.partial(_deconv_tiled_kernel, phases=meta, strides=strides,
+                          tile_uv=(tu, tv), min_off=(mh, mw),
+                          n_c_tiles=n_c_tiles),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((total_taps, c_tile, n_tile),
+                         lambda b_, i_, j_, n_, c_: (0, c_, n_)),
+        ],
+        out_specs=pl.BlockSpec((1, tu * sh, tv * sw, n_tile),
+                               lambda b_, i_, j_, n_, c_: (b_, i_, j_, n_)),
+        out_shape=jax.ShapeDtypeStruct(
+            (b, n_oi * tu * sh, n_oj * tv * sw, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((2, tin_h, tin_w, c_tile), xg.dtype),
+                        pltpu.SemaphoreType.DMA((2,)),
+                        pltpu.VMEM((len(phases) * tu * tv, n_tile),
+                                   jnp.float32)],
+        interpret=interpret,
+    )(xg, k3)
+    return out[:, :oh, :ow, :n]
+
+
 def vmem_bytes_estimate(hp, wp, c_tile, r, s, n_tile, oh, ow, itemsize=4):
     """Working-set estimate used by the dispatcher to pick tile sizes.
 
@@ -281,3 +575,25 @@ def vmem_bytes_estimate_superpack(hp, wp, c_tile, total_taps, n_tile,
     kernel is ever resident).  f32 accumulator always at 4 bytes/elem."""
     return itemsize * (hp * wp * c_tile + total_taps * c_tile * n_tile +
                        oh * ow * n_tile) + 4 * oh * ow * n_tile
+
+
+def vmem_bytes_estimate_tiled(tin_h, tin_w, c_tile, total_taps, n_tile,
+                              acc_rows, itemsize=4):
+    """Working set of the spatially tiled kernels (both kinds):
+
+    - ``2 · tin_h · tin_w · C_t`` — the halo'd input tile, **twice** (the
+      double buffer: one slot computing, one streaming the next halo
+      slice), at the input itemsize;
+    - ``total_taps · C_t · N_t`` — the superpack tile (R·S taps for the
+      single-correlation kind, ΣT for the multi-phase deconv);
+    - ``acc_rows · N_t`` — the output block at the input itemsize *plus*
+      the f32 accumulator at a fixed 4 bytes/elem.  ``acc_rows`` is the
+      output-tile pixel count: ``T_oh·T_ow`` (single) or ``s_h·s_w·T_u·T_v``
+      (deconv — every phase's segment of the shared scratch).
+
+    ``tin_* = halo_extent(tile, taps, stride, dilation)`` for the single
+    kind; the deconv's halo is the phase tap-origin span plus the tile
+    (``deconv_tap_span``)."""
+    return itemsize * (2 * tin_h * tin_w * c_tile +
+                       total_taps * c_tile * n_tile + acc_rows * n_tile) \
+        + 4 * acc_rows * n_tile

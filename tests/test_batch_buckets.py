@@ -11,28 +11,9 @@ import pytest
 
 import repro.core.plan as planmod
 from repro.core import reference as ref
-from repro.core.plan import BATCH_BUCKETS, ConvSpec, plan_cache_clear, plan_conv
+from repro.core.plan import BATCH_BUCKETS, ConvSpec, plan_conv
 
-
-def assert_close(a, b, tol=2e-4):
-    np.testing.assert_allclose(np.asarray(a, np.float32),
-                               np.asarray(b, np.float32), rtol=tol, atol=tol)
-
-
-def count_eqns(jaxpr, prim_name):
-    total = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == prim_name:
-            total += 1
-        if eqn.primitive.name == "pallas_call":
-            continue
-        for v in eqn.params.values():
-            for sub in (v if isinstance(v, (list, tuple)) else [v]):
-                if hasattr(sub, "eqns"):
-                    total += count_eqns(sub, prim_name)
-                elif hasattr(sub, "jaxpr"):
-                    total += count_eqns(sub.jaxpr, prim_name)
-    return total
+from tests.conftest import assert_close, count_eqns, plane_bytes_cap
 
 
 def transposed_spec(**kw):
@@ -90,12 +71,8 @@ def tight_cap():
     r, s = spec.kernel_hw
     oh = ow = 16
     per_image = 4 * oh * ow * r * s * spec.in_c
-    old = planmod._PLANE_BYTES_MAX
-    planmod._PLANE_BYTES_MAX = per_image * 4          # B=4 fits exactly
-    plan_cache_clear()
-    yield spec
-    planmod._PLANE_BYTES_MAX = old
-    plan_cache_clear()
+    with plane_bytes_cap(per_image * 4):              # B=4 fits exactly
+        yield spec
 
 
 def test_single_route_switches_at_cap(tight_cap):
@@ -142,10 +119,7 @@ def test_transposed_route_switches_at_cap():
     hg = spec.in_hw[0] + glh + ghh
     wg = spec.in_hw[1] + glw + ghw
     plane1 = 4 * hg * wg * plan.total_taps * spec.out_c
-    old = planmod._PLANE_BYTES_MAX
-    planmod._PLANE_BYTES_MAX = plane1 * 4             # B=4 fits, B=16 not
-    plan_cache_clear()
-    try:
+    with plane_bytes_cap(plane1 * 4):                 # B=4 fits, B=16 not
         plan_t = plan_conv(spec)
         paths = {r.batch: r.path for r in plan_t.routes}
         assert paths[1] == "fused_plane" and paths[4] == "fused_plane"
@@ -160,9 +134,6 @@ def test_transposed_route_switches_at_cap():
             want = ref.oracle_conv_transpose2d(
                 x, k, strides=spec.strides, padding=spec.padding)
             assert_close(plan_t.apply(x, packed), want)
-    finally:
-        planmod._PLANE_BYTES_MAX = old
-        plan_cache_clear()
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,8 @@
 """Fused single-launch transposed conv: one Pallas launch / one wide GEMM
 per conv site, superpacked weight layout, and fused-vs-per-phase parity.
-No hypothesis dependency — this file must run everywhere tier-1 runs."""
+No hypothesis dependency — this file must run everywhere tier-1 runs.
+Shared helpers (oracles, assertions, jaxpr counting) live in
+``tests/conftest.py``."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,40 +10,9 @@ import pytest
 
 from repro.core import reference as ref
 from repro.core.plan import ConvSpec, conv_spec, plan_conv
-from repro.models.gan import DCGAN_LAYERS, deconv_padding
+from repro.models.gan import DCGAN_LAYERS
 
-
-def assert_close(a, b, tol=2e-4):
-    np.testing.assert_allclose(np.asarray(a, np.float32),
-                               np.asarray(b, np.float32), rtol=tol, atol=tol)
-
-
-def count_eqns(jaxpr, prim_name):
-    """Recursively count equations named ``prim_name``, descending into
-    sub-jaxprs (custom_vjp calls, pjit bodies, ...) — but not into a
-    pallas_call's kernel body: its interior matmuls live inside the one
-    launch being counted."""
-    total = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == prim_name:
-            total += 1
-        if eqn.primitive.name == "pallas_call":
-            continue
-        for v in eqn.params.values():
-            for sub in (v if isinstance(v, (list, tuple)) else [v]):
-                if hasattr(sub, "eqns"):
-                    total += count_eqns(sub, prim_name)
-                elif hasattr(sub, "jaxpr"):
-                    total += count_eqns(sub.jaxpr, prim_name)
-    return total
-
-
-def dcgan_plan(l, backend="xla"):
-    return plan_conv(ConvSpec(
-        kind="transposed", in_hw=(l.in_hw, l.in_hw), in_c=l.in_c,
-        out_c=l.out_c, kernel_hw=(l.kernel, l.kernel),
-        strides=(l.stride, l.stride),
-        padding=deconv_padding(l.kernel, l.stride), backend=backend))
+from tests.conftest import assert_close, count_eqns
 
 
 # ---------------------------------------------------------------------------
@@ -49,7 +20,7 @@ def dcgan_plan(l, backend="xla"):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("i", range(len(DCGAN_LAYERS)))
-def test_xla_forward_is_single_wide_gemm(i):
+def test_xla_forward_is_single_wide_gemm(i, dcgan_plan):
     """Every Table-1 DCGAN deconv site lowers to exactly one dot_general."""
     l = DCGAN_LAYERS[i]
     plan = dcgan_plan(l)
@@ -80,10 +51,11 @@ def test_pallas_forward_is_single_launch():
 # ---------------------------------------------------------------------------
 
 def test_superpack_layout_and_offsets():
+    from tests.conftest import packed_roundtrip
     k = jax.random.normal(jax.random.PRNGKey(0), (5, 4, 3, 2), jnp.float32)
     plan = plan_conv(conv_spec("transposed", (1, 4, 4, 3), k.shape,
                                strides=(2, 3), padding=((2, 2), (1, 1))))
-    packed = plan.pack(k)
+    packed = packed_roundtrip(plan, k)
     c, n = plan.spec.in_c, plan.spec.out_c
     assert packed.shape == (plan.total_taps * c, n)
     # each phase's rows sit at tap_off*C and match the per-phase slicing
@@ -96,11 +68,9 @@ def test_superpack_layout_and_offsets():
         seg = packed[ex.tap_off * c:(ex.tap_off + th * tw) * c]
         np.testing.assert_array_equal(
             np.asarray(seg), np.asarray(subs[ex.q].reshape(th * tw * c, n)))
-    # offsets partition the buffer exactly
+    # offsets partition the buffer exactly (round-trip asserted above)
     assert sum(ex.taps[0] * ex.taps[1] for ex in plan.phases) \
         == plan.total_taps
-    np.testing.assert_array_equal(np.asarray(plan.unpack(packed)),
-                                  np.asarray(k))
 
 
 def test_legacy_phase_dict_adapts_to_superpack():

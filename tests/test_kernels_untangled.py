@@ -1,31 +1,36 @@
-"""Pallas untangled-conv kernel vs pure-jnp oracle (interpret=True on CPU).
+"""Pallas untangled-conv kernel vs the float64 numpy oracle (interpret=True
+on CPU).  Sweeps shapes, strides, dilations, dtypes per the kernel-test
+contract.
 
-Sweeps shapes, strides, dilations, dtypes per the kernel-test contract.
+Tolerance contract: every parity assertion here is an **ULP-scaled bound
+against the float64 oracle** (``tests/conftest.py``'s ``conv_oracle_f64`` /
+``assert_close_ulp``), not an rtol guess.  The bound is the standard
+recursive-summation forward error (Higham, *Accuracy and Stability of
+Numerical Algorithms*, §4.2): any ordering of an ``n``-term f32 accumulation
+satisfies ``|fl(Σ) − Σ| ≤ γ_{n+1}·Σ|x_i·k_i|`` with ``γ_n = n·u/(1−n·u)``
+and ``u = 2⁻²⁴``, plus half an output-ULP for the final cast.  ``n`` here is
+the contraction length ``R·S·C``.  This replaces the widened fixed rtol the
+(160, 96) case used to need: the bound scales with each output element's
+*condition* (``Σ|x·k|``), so accumulation-order divergence between the
+tap-major kernel and any reference ordering is covered by construction,
+while a genuine defect (wrong tap offset, wrong superpack row) lands orders
+of magnitude outside it.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "hypothesis",
-    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+try:                      # only the property sweep needs hypothesis
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:       # pragma: no cover - exercised on minimal hosts
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels.ops import untangled_conv2d
 from repro.kernels.ref import untangled_conv2d_ref
 
-
-def tol_for(dtype):
-    # f32 tolerance must cover accumulation-order divergence: the kernel sums
-    # taps in f32 scratch (tap-major), the reference contracts in a different
-    # order, and reordering an n-term f32 dot can shift the result by up to
-    # ~n·eps relative in the worst case (typical ~sqrt(n)·eps).  The (160,96)
-    # case contracts 5*5*160 = 4000 terms: sqrt(n)·eps ≈ 7.5e-6, n·eps ≈
-    # 4.8e-4.  rtol 1e-4 sits between the typical and worst-case bound —
-    # deterministic on shared hosts without absorbing order-of-magnitude
-    # defects.
-    return 2e-2 if dtype == jnp.bfloat16 else 1e-4
+from tests.conftest import assert_close_ulp, conv_oracle_f64
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -41,34 +46,39 @@ def tol_for(dtype):
         (1, 7, 7, 300, 40, 1, 1, (1, 1), (1, 1)),    # pure 1x1 conv
         (3, 5, 5, 130, 200, 2, 2, (1, 1), (1, 1)),   # C and N both ragged-tiled
     ])
-def test_kernel_matches_ref(b, h, w, c, n, r, s, strides, dil, dtype):
+def test_kernel_matches_f64_oracle(b, h, w, c, n, r, s, strides, dil, dtype):
+    """Kernel output within the ULP-scaled f64-oracle bound (see module
+    docstring for the derivation).  bf16 products are exact in the f32
+    accumulator (8-bit mantissas), so the same γ_{n+1} bound applies with
+    the output cast charged at ε_bf16 = 2⁻⁸."""
     k1, k2 = jax.random.split(jax.random.PRNGKey(h * 31 + c))
     x = jax.random.normal(k1, (b, h, w, c), dtype)
     k = jax.random.normal(k2, (r, s, c, n), dtype)
     got = untangled_conv2d(x, k, strides=strides, rhs_dilation=dil,
                            interpret=True)
-    want = untangled_conv2d_ref(x, k, strides=strides, rhs_dilation=dil)
-    assert got.shape == want.shape
-    np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(want, np.float32),
-                               rtol=tol_for(dtype), atol=tol_for(dtype) * 4)
+    y64, amax64 = conv_oracle_f64(x, k, strides=strides, dilation=dil)
+    assert got.shape == y64.shape
+    assert_close_ulp(got, y64, amax64, n_terms=r * s * c, out_dtype=dtype)
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.integers(1, 2), st.integers(4, 10), st.integers(4, 10),
-       st.integers(1, 40), st.integers(1, 40), st.integers(1, 3),
-       st.integers(1, 3), st.integers(0, 2))
-def test_kernel_property_sweep(b, h, w, c, n, r, s, pad):
-    if h - r + 1 + 2 * pad <= 0 or w - s + 1 + 2 * pad <= 0:
-        return
-    k1, k2 = jax.random.split(jax.random.PRNGKey(b + h * 13 + c * 7))
-    x = jax.random.normal(k1, (b, h, w, c), jnp.float32)
-    k = jax.random.normal(k2, (r, s, c, n), jnp.float32)
-    pads = ((pad, pad), (pad, pad))
-    got = untangled_conv2d(x, k, padding=pads, interpret=True)
-    want = untangled_conv2d_ref(x, k, padding=pads)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=2e-5, atol=1e-4)
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 2), st.integers(4, 10), st.integers(4, 10),
+           st.integers(1, 40), st.integers(1, 40), st.integers(1, 3),
+           st.integers(1, 3), st.integers(0, 2))
+    def test_kernel_property_sweep(b, h, w, c, n, r, s, pad):
+        if h - r + 1 + 2 * pad <= 0 or w - s + 1 + 2 * pad <= 0:
+            return
+        k1, k2 = jax.random.split(jax.random.PRNGKey(b + h * 13 + c * 7))
+        x = jax.random.normal(k1, (b, h, w, c), jnp.float32)
+        k = jax.random.normal(k2, (r, s, c, n), jnp.float32)
+        pads = ((pad, pad), (pad, pad))
+        got = untangled_conv2d(x, k, padding=pads, interpret=True)
+        y64, amax64 = conv_oracle_f64(x, k, padding=pads)
+        assert_close_ulp(got, y64, amax64, n_terms=r * s * c)
+        # and the pure-jnp reference stays within the same bound of the oracle
+        want = untangled_conv2d_ref(x, k, padding=pads)
+        assert_close_ulp(want, y64, amax64, n_terms=r * s * c)
 
 
 def test_engine_pallas_backend_end_to_end():

@@ -1,0 +1,61 @@
+"""Golden route-table regression: every model-zoo conv site's per-bucket
+execution route is pinned to ``tests/fixtures/route_table.json``.
+
+A route is the engine's whole performance story for a site (Pallas vs XLA,
+whole-plane vs spatially tiled, fused vs per-tap backward) — this test
+turns any change to it into an **explicit fixture diff** instead of a
+silent perf cliff.  After an intentional routing change::
+
+    PYTHONPATH=src python tools/gen_route_table.py
+
+and commit the regenerated fixture; the diff *is* the review artifact.
+"""
+import json
+import pathlib
+
+from tools.gen_route_table import FIXTURE, build_route_table
+
+
+def _fmt(entry):
+    routes = ", ".join(
+        f"B{r['batch']}:{r['path']}"
+        + (f"@sp{tuple(r['sp_tiles'])}" if r["sp_tiles"] else "")
+        for r in entry["routes"])
+    return f"{entry['name']}[{entry['backend']}] -> {routes}"
+
+
+def test_route_table_matches_fixture():
+    assert FIXTURE.exists(), \
+        "fixture missing — run PYTHONPATH=src python tools/gen_route_table.py"
+    want = json.loads(pathlib.Path(FIXTURE).read_text())
+    got = build_route_table()
+    if got == want:
+        return
+    want_by_key = {(e["name"], e["backend"]): e for e in want["entries"]}
+    got_by_key = {(e["name"], e["backend"]): e for e in got["entries"]}
+    lines = []
+    for key in sorted(set(want_by_key) | set(got_by_key)):
+        w, g = want_by_key.get(key), got_by_key.get(key)
+        if w == g:
+            continue
+        lines.append(f"  was: {_fmt(w) if w else '<absent>'}")
+        lines.append(f"  now: {_fmt(g) if g else '<absent>'}")
+    raise AssertionError(
+        "route table drifted from the golden fixture — if intentional, "
+        "regenerate with `PYTHONPATH=src python tools/gen_route_table.py` "
+        "and commit the diff:\n" + "\n".join(lines))
+
+
+def test_fixture_records_the_reclaimed_geometry():
+    """The acceptance-criterion geometry is pinned in the fixture: the
+    385x385 atrous layer routes 'taps' on the XLA backend (what HEAD's
+    pallas verdict also fell back to) and 'pallas' with spatial tiles on
+    the Pallas backend, at every bucket including B=64."""
+    table = json.loads(pathlib.Path(FIXTURE).read_text())
+    by_key = {(e["name"], e["backend"]): e for e in table["entries"]}
+    name = "dilated_bench_L9_385x385x32_d2"
+    xla = by_key[(name, "xla")]
+    pallas = by_key[(name, "pallas")]
+    assert all(r["path"] == "taps" for r in xla["routes"])
+    assert all(r["path"] == "pallas" and r["sp_tiles"]
+               for r in pallas["routes"])

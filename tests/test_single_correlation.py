@@ -2,7 +2,9 @@
 Pallas launch / one wide GEMM per conv site on the (R·S·C, N) tap superpack,
 parity with the XLA oracle, and the custom VJP on the packed layout across
 odd dilations, asymmetric padding, and dilation >= kernel extent.
-No hypothesis dependency — this file must run everywhere tier-1 runs."""
+No hypothesis dependency — this file must run everywhere tier-1 runs.
+Shared helpers (oracles, assertions, jaxpr counting, plan builders) live in
+``tests/conftest.py``."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,19 +13,7 @@ import pytest
 from repro.core import reference as ref
 from repro.core.plan import ConvSpec, conv_spec, plan_conv
 
-from tests.test_fused_single_launch import count_eqns
-
-
-def assert_close(a, b, tol=2e-4):
-    np.testing.assert_allclose(np.asarray(a, np.float32),
-                               np.asarray(b, np.float32), rtol=tol, atol=tol)
-
-
-def single_plan(h, w, c, n, r, s, strides, dil, pads, backend="xla"):
-    kind = "dilated" if tuple(dil) != (1, 1) else "conv"
-    return plan_conv(conv_spec(kind, (1, h, w, c), (r, s, c, n),
-                               strides=strides, padding=pads, dilation=dil,
-                               backend=backend)), kind
+from tests.conftest import assert_close, count_eqns, plane_bytes_cap
 
 
 # ---------------------------------------------------------------------------
@@ -39,7 +29,7 @@ SEG_SITES = [
 
 
 @pytest.mark.parametrize("h,c,n,k,d", SEG_SITES)
-def test_xla_forward_is_single_wide_gemm(h, c, n, k, d):
+def test_xla_forward_is_single_wide_gemm(h, c, n, k, d, single_plan):
     """Every planned dilated site on the fused_tap route lowers to exactly
     one dot_general (and no pallas_call)."""
     pad = ((d, d), (d, d))
@@ -53,7 +43,7 @@ def test_xla_forward_is_single_wide_gemm(h, c, n, k, d):
     assert count_eqns(jaxpr.jaxpr, "conv_general_dilated") == 0
 
 
-def test_pallas_forward_is_single_launch():
+def test_pallas_forward_is_single_launch(single_plan):
     """backend='pallas' lowers the whole dilated conv to one pallas_call
     (and no XLA GEMM outside it)."""
     plan, _ = single_plan(13, 13, 8, 8, 3, 3, (1, 1), (2, 2),
@@ -66,7 +56,7 @@ def test_pallas_forward_is_single_launch():
     assert count_eqns(jaxpr.jaxpr, "dot_general") == 0
 
 
-def test_strided_conv_is_single_wide_gemm():
+def test_strided_conv_is_single_wide_gemm(single_plan):
     """The strided 'conv' kind rides the same route: one dot_general."""
     plan, kind = single_plan(12, 12, 6, 8, 3, 3, (2, 2), (1, 1),
                              ((1, 1), (1, 1)))
@@ -80,7 +70,7 @@ def test_strided_conv_is_single_wide_gemm():
 # superpack layout invariants
 # ---------------------------------------------------------------------------
 
-def test_superpack_layout_row_offsets_and_roundtrip():
+def test_superpack_layout_row_offsets_and_roundtrip(single_plan):
     k = jax.random.normal(jax.random.PRNGKey(0), (3, 2, 5, 4), jnp.float32)
     plan, _ = single_plan(9, 9, 5, 4, 3, 2, (1, 1), (2, 3), ((2, 2), (1, 1)))
     packed = plan.pack(k)
@@ -99,7 +89,7 @@ def test_superpack_layout_row_offsets_and_roundtrip():
                                   np.asarray(packed))
 
 
-def test_full_kernel_adapts_to_superpack():
+def test_full_kernel_adapts_to_superpack(single_plan):
     """Legacy params holding (R,S,C,N) HWIO kernels still apply/unpack."""
     k = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 4, 6), jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(2), (2, 9, 9, 4), jnp.float32)
@@ -128,7 +118,7 @@ PARITY_CASES = [
 
 @pytest.mark.parametrize("backend", ["xla", "pallas"])
 @pytest.mark.parametrize("case", PARITY_CASES)
-def test_planned_matches_oracle(case, backend):
+def test_planned_matches_oracle(case, backend, single_plan):
     h, w, r, s, strides, dil, pads = case
     key = jax.random.PRNGKey(abs(hash(case)) % (2 ** 31))
     k1, k2 = jax.random.split(key)
@@ -141,9 +131,8 @@ def test_planned_matches_oracle(case, backend):
     assert_close(plan.apply(x, plan.pack(k)), want)
 
 
-def test_taps_fallback_matches_fused():
+def test_taps_fallback_matches_fused(single_plan):
     """Force the per-tap fallback (buffer cap) and check parity."""
-    import repro.core.plan as planmod
     case = (9, 9, 3, 3, (1, 1), (2, 2), ((2, 2), (2, 2)))
     h, w, r, s, strides, dil, pads = case
     key = jax.random.PRNGKey(5)
@@ -151,10 +140,7 @@ def test_taps_fallback_matches_fused():
     k = jax.random.normal(key, (r, s, 3, 4), jnp.float32)
     plan, _ = single_plan(h, w, 3, 4, r, s, strides, dil, pads)
     assert plan.path == "fused_tap"
-    old = planmod._PLANE_BYTES_MAX
-    planmod._PLANE_BYTES_MAX = 0
-    planmod.plan_cache_clear()
-    try:
+    with plane_bytes_cap(0):
         plan_t, _ = single_plan(h, w, 3, 4, r, s, strides, dil, pads)
         assert plan_t.path == "taps"
         want = ref.oracle_dilated_conv2d(x, k, dilation=dil, strides=strides,
@@ -168,9 +154,6 @@ def test_taps_fallback_matches_fused():
         (dx, dpk), (dx_o, dk_o) = vjp(dy), vjp_o(dy)
         assert_close(dx, dx_o, tol=1e-3)
         assert_close(plan_t.unpack(dpk), dk_o, tol=1e-3)
-    finally:
-        planmod._PLANE_BYTES_MAX = old
-        planmod.plan_cache_clear()
 
 
 # ---------------------------------------------------------------------------
@@ -179,7 +162,7 @@ def test_taps_fallback_matches_fused():
 
 @pytest.mark.parametrize("backend", ["xla", "pallas"])
 @pytest.mark.parametrize("case", PARITY_CASES[:6])
-def test_grad_of_apply_on_superpack(case, backend):
+def test_grad_of_apply_on_superpack(case, backend, single_plan):
     """VJP through the planned executor, on the superpacked layout, matches
     autodiff of the XLA oracle (dx directly; dK after unpack) — odd
     dilations, asymmetric padding, dilation >= kernel extent, strides."""
@@ -224,7 +207,7 @@ def test_grad_with_full_kernel_cotangent_shape():
     assert_close(dk, dk_o, tol=1e-3)
 
 
-def test_negative_padding_vjp():
+def test_negative_padding_vjp(single_plan):
     """pad_or_crop's crop branch transposes correctly in the backward."""
     key = jax.random.PRNGKey(13)
     x = jax.random.normal(key, (1, 12, 12, 3), jnp.float32)

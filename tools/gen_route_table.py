@@ -1,0 +1,130 @@
+"""Golden route-table generator: snapshot every model-zoo conv site's
+per-bucket ``route_for_batch`` decision into a checked-in fixture.
+
+The fixture (``tests/fixtures/route_table.json``) makes execution-path
+changes an **explicit reviewable diff** instead of a silent perf cliff:
+``tests/test_route_table.py`` rebuilds the table in-process and fails with
+the drifted entries if it no longer matches.  After an *intentional* route
+policy change, regenerate and commit the diff::
+
+    PYTHONPATH=src python tools/gen_route_table.py
+
+Covered sites: the fig7 suite (Table-1 DCGAN + cGAN generators, the VAE
+decoder), the VAE encoder, every SegNet layer (strided front-end, atrous
+context, 1x1 head), and the BENCH_dilated layer suite — each planned under
+both explicit backends ('xla' and 'pallas'; 'auto' is excluded because its
+verdict depends on the host's jax.default_backend()).  Routes are pure
+plan-time arithmetic over the spec constants, so the table is identical on
+every host.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+if str(_ROOT) not in sys.path:          # benchmarks.* lives at the repo root
+    sys.path.insert(0, str(_ROOT))
+
+FIXTURE = _ROOT / "tests" / "fixtures" / "route_table.json"
+
+BACKENDS = ("xla", "pallas")
+
+
+def route_specs():
+    """(name, ConvSpec) for every covered conv site (backend-less)."""
+    from repro.core.plan import ConvSpec
+    from repro.models.gan import CGAN_LAYERS, DCGAN_LAYERS, deconv_padding
+    from repro.models.segnet import SEGNET, atrous_padding
+    from repro.models.vae import VAE
+
+    specs = []
+
+    def transposed(name, l):
+        specs.append((name, ConvSpec(
+            kind="transposed", in_hw=(l.in_hw, l.in_hw), in_c=l.in_c,
+            out_c=l.out_c, kernel_hw=(l.kernel, l.kernel),
+            strides=(l.stride, l.stride),
+            padding=deconv_padding(l.kernel, l.stride))))
+
+    for gan, layers in (("DCGAN", DCGAN_LAYERS), ("cGAN", CGAN_LAYERS),
+                        ("VAEdec", VAE.decoder_layers)):
+        for i, l in enumerate(layers):
+            transposed(f"fig7_{gan}_DC{i + 1}", l)
+
+    for i, l in enumerate(VAE.encoder_layers):
+        k = l.kernel
+        specs.append((f"vae_enc_L{i}", ConvSpec(
+            kind="conv", in_hw=(l.in_hw, l.in_hw), in_c=l.in_c,
+            out_c=l.out_c, kernel_hw=(k, k), strides=(l.stride, l.stride),
+            padding=((k // 2, (k - 1) // 2), (k // 2, (k - 1) // 2)))))
+
+    for i, l in enumerate(SEGNET.layers):
+        specs.append((f"segnet_L{i}_{l.kind}_d{l.dilation}", ConvSpec(
+            kind=l.kind, in_hw=(l.in_hw, l.in_hw), in_c=l.in_c,
+            out_c=l.out_c, kernel_hw=(l.kernel, l.kernel),
+            strides=(l.stride, l.stride),
+            padding=atrous_padding(l.kernel, l.dilation),
+            dilation=(l.dilation, l.dilation))))
+
+    from benchmarks.dilated_conv import LAYERS as DILATED_BENCH
+    for i, (h, c, n, k, d) in enumerate(DILATED_BENCH):
+        specs.append((f"dilated_bench_L{i}_{h}x{h}x{c}_d{d}", ConvSpec(
+            kind="dilated", in_hw=(h, h), in_c=c, out_c=n,
+            kernel_hw=(k, k), padding=atrous_padding(k, d),
+            dilation=(d, d))))
+    return specs
+
+
+def build_route_table():
+    """The full table as a JSON-ready dict (deterministic ordering)."""
+    import dataclasses
+
+    from repro.core.plan import BATCH_BUCKETS, plan_conv
+
+    entries = []
+    for name, spec in route_specs():
+        for backend in BACKENDS:
+            plan = plan_conv(dataclasses.replace(spec, backend=backend))
+            entries.append({
+                "name": name,
+                "backend": backend,
+                "spec": {
+                    "kind": spec.kind, "in_hw": list(spec.in_hw),
+                    "in_c": spec.in_c, "out_c": spec.out_c,
+                    "kernel_hw": list(spec.kernel_hw),
+                    "strides": list(spec.strides),
+                    "padding": [list(p) for p in spec.padding],
+                    "dilation": list(spec.dilation),
+                },
+                "routes": [{
+                    "batch": r.batch,
+                    "path": r.path,
+                    "tiles": list(r.tiles) if r.tiles else None,
+                    "sp_tiles": list(r.sp_tiles) if r.sp_tiles else None,
+                    "fused_bwd": r.fused_bwd,
+                } for r in plan.routes],
+            })
+    return {
+        "generated_by": "PYTHONPATH=src python tools/gen_route_table.py",
+        "buckets": list(BATCH_BUCKETS),
+        "backends": list(BACKENDS),
+        "entries": entries,
+    }
+
+
+def main():
+    table = build_route_table()
+    FIXTURE.parent.mkdir(parents=True, exist_ok=True)
+    FIXTURE.write_text(json.dumps(table, indent=1) + "\n")
+    n_pallas = sum(1 for e in table["entries"] for r in e["routes"]
+                   if r["path"] == "pallas")
+    n_tiled = sum(1 for e in table["entries"] for r in e["routes"]
+                  if r["sp_tiles"])
+    print(f"wrote {FIXTURE} ({len(table['entries'])} entries, "
+          f"{n_pallas} pallas routes of which {n_tiled} tiled)")
+
+
+if __name__ == "__main__":
+    main()
