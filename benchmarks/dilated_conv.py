@@ -21,6 +21,11 @@ correctness oracle):
   is against engines that *execute* the zero-inserted formulation, plus
   the load-time packed-weight layout the oracle cannot hold.
 
+An ``autotuned_us`` column runs the same site through a measure-mode
+``AutotunePolicy`` (memory-only cache, benched bucket only) and reports the
+measured route + its speedup over the heuristic pick
+(``autotune_vs_heuristic``; ``route_flipped`` when they differ).
+
 Layer shapes are the SegNet context blocks (``models/segnet.py`` — constant
 resolution, dilation 1..8) plus DeepLab-v3-style atrous heads at CIFAR/edge
 scale.  Emits machine-readable ``BENCH_dilated.json`` (per-layer µs +
@@ -38,6 +43,7 @@ import numpy as np
 
 from benchmarks.util import csv_row, geomean, pallas_tiled_record, time_fn
 from repro.core import reference as ref
+from repro.core.autotune import AutotunePolicy
 from repro.core.plan import conv_spec, plan_conv
 from repro.models.segnet import SEGNET, atrous_padding
 
@@ -80,8 +86,16 @@ def bench_layer(h, c, n, k, d, iters=5, warmup=2):
     plan_p = plan_conv(conv_spec("dilated", x.shape, kern.shape,
                                  dilation=(d, d), padding=pad,
                                  backend="pallas"))
+    # autotuned column: routes measured for the benched bucket only, on a
+    # memory-only cache (the bench is the measurement, not a cache client)
+    plan_at = plan_conv(conv_spec("dilated", x.shape, kern.shape,
+                                  dilation=(d, d), padding=pad),
+                        autotune=AutotunePolicy(
+                            mode="measure", cache_path="", buckets=(BATCH,),
+                            iters=iters, warmup=warmup))
 
     untangled = jax.jit(plan.apply)
+    autotuned = jax.jit(plan_at.apply)
     baseline = jax.jit(functools.partial(ref.naive_dilated_conv2d,
                                          dilation=(d, d), padding=pad))
     oracle = jax.jit(functools.partial(ref.oracle_dilated_conv2d,
@@ -91,9 +105,16 @@ def bench_layer(h, c, n, k, d, iters=5, warmup=2):
                                np.asarray(want), rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(np.asarray(baseline(x, kern)),
                                np.asarray(want), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(autotuned(x, packed)),
+                               np.asarray(want), rtol=2e-4, atol=2e-4)
     bytes_model = ref.bytes_planned_single(plan, b=BATCH)
     return {
         "path": plan.path,
+        "autotuned_path": plan_at.route_for_batch(BATCH).path,
+        "route_flipped": (plan_at.route_for_batch(BATCH)
+                          != plan.route_for_batch(BATCH)),
+        "autotuned_us": time_fn(autotuned, x, packed, iters=iters,
+                                warmup=warmup) * 1e6,
         "pallas_tiled": pallas_tiled_record(
             plan_p, apply_fn=plan_p.apply, args=(x, packed),
             iters=iters, warmup=warmup),
@@ -121,6 +142,7 @@ def main(print_csv=True, quick=False, json_path=JSON_PATH):
         rec["speedup_vs_rhs_dilation"] = (t["rhs_dilation_us"]
                                          / t["untangled_us"])
         rec["speedup_vs_lax_oracle"] = t["lax_oracle_us"] / t["untangled_us"]
+        rec["autotune_vs_heuristic"] = t["untangled_us"] / t["autotuned_us"]
         records.append(rec)
         pt = t["pallas_tiled"]
         rows.append(csv_row(
@@ -132,10 +154,15 @@ def main(print_csv=True, quick=False, json_path=JSON_PATH):
             f"path={t['path']} "
             f"pallas_tiled={pt['path']}"
             + (f"@sp{tuple(pt['sp_tiles'])}" if pt["tiled"] else "")
+            + f" autotuned={t['autotuned_path']}"
+            + ("*" if t["route_flipped"] else "")
+            + f"@{rec['autotune_vs_heuristic']:.2f}x"
             + f" plan_ms={t['plan_ms']:.2f}"))
 
     geo = geomean([r["speedup_vs_rhs_dilation"] for r in records])
     geo_lax = geomean([r["speedup_vs_lax_oracle"] for r in records])
+    geo_at = geomean([r["autotune_vs_heuristic"] for r in records])
+    flipped = [r["name"] for r in records if r["route_flipped"]]
     reclaimed = [r["name"] for r in records if r["pallas_tiled"]["tiled"]]
     payload = {
         "bench": "dilated", "batch": BATCH, "quick": quick,
@@ -143,6 +170,8 @@ def main(print_csv=True, quick=False, json_path=JSON_PATH):
         "layers": records,
         "geomean_untangled_vs_rhs_dilation": geo,
         "geomean_untangled_vs_lax_oracle": geo_lax,
+        "geomean_autotuned_vs_heuristic": geo_at,
+        "routes_flipped": flipped,
         # geometries only the spatially tiled kernel keeps on the Pallas
         # route (whole-plane VMEM residency is infeasible for them)
         "pallas_tiled_reclaimed": reclaimed,
@@ -155,6 +184,8 @@ def main(print_csv=True, quick=False, json_path=JSON_PATH):
             print(r)
         print(f"# geomean_untangled_vs_rhs_dilation={geo:.2f}x "
               f"(vs_lax_oracle={geo_lax:.2f}x) "
+              f"geomean_autotuned_vs_heuristic={geo_at:.2f}x "
+              f"routes_flipped={flipped} "
               f"pallas_tiled_reclaimed={reclaimed}"
               + (f" -> {json_path}" if json_path else ""))
     return payload

@@ -16,6 +16,11 @@ Engines measured per layer:
 - ``unplanned_us`` — the planned executor with the raw kernel as a call
   argument (re-packing traced into every call) — the load-time-vs-call-time
   gap the plan/executor refactor removes.
+- ``autotuned_us`` — the same site planned with a measure-mode
+  ``AutotunePolicy`` (memory-only cache, benched bucket only): the route is
+  whatever the microbenchmarks crowned, which may differ from the heuristic
+  pick (``route_flipped``); ``autotune_vs_heuristic`` is the measured
+  speedup of the tuned route over the heuristic one.
 
 ``main`` also emits machine-readable ``BENCH_fig7.json`` so CI tracks the
 perf trajectory; ``quick=True`` shrinks the timing loop for smoke runs.
@@ -32,6 +37,7 @@ from benchmarks.util import (csv_row, geomean as geo_mean,
                              pallas_tiled_record, time_fn)
 from repro.core import huge_conv_transpose2d
 from repro.core import reference as ref
+from repro.core.autotune import AutotunePolicy
 from repro.core.plan import ConvSpec, plan_conv
 from repro.models.gan import CGAN_LAYERS, DCGAN_LAYERS, deconv_padding
 from repro.models.vae import VAE
@@ -49,11 +55,17 @@ def bench_layer(l, backend="xla", iters=10, warmup=3):
     strides = (l.stride, l.stride)
     khw = (l.kernel, l.kernel)
 
-    plan = plan_conv(ConvSpec(                                   # offline
+    spec = ConvSpec(
         kind="transposed", in_hw=(l.in_hw, l.in_hw), in_c=l.in_c,
         out_c=l.out_c, kernel_hw=khw, strides=strides, padding=pad,
-        backend=backend))
+        backend=backend)
+    plan = plan_conv(spec)                                       # offline
     packed = jax.block_until_ready(plan.pack(k))                 # offline
+    # autotuned column: same spec, routes measured (memory-only cache so
+    # the bench never reads a stale per-host file; benched bucket only)
+    plan_at = plan_conv(spec, autotune=AutotunePolicy(
+        mode="measure", cache_path="", buckets=(BATCH,),
+        iters=iters, warmup=warmup))
     w_flat = k.reshape(l.kernel * l.kernel * l.in_c, l.out_c)    # offline
     # the pallas_tiled column: the same site planned under backend='pallas'
     # (whole-plane or spatially tiled route; timed on TPU hosts only)
@@ -66,6 +78,7 @@ def bench_layer(l, backend="xla", iters=10, warmup=3):
                                       kernel_hw=khw, strides=strides,
                                       padding=pad))
     planned = jax.jit(plan.apply)
+    autotuned = jax.jit(plan_at.apply)
     per_phase = jax.jit(plan.apply_per_phase)
     unplanned = jax.jit(functools.partial(huge_conv_transpose2d,
                                           strides=strides, padding=pad))
@@ -80,8 +93,15 @@ def bench_layer(l, backend="xla", iters=10, warmup=3):
                                np.asarray(want), rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(np.asarray(unplanned(x, k)),
                                np.asarray(want), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(autotuned(x, packed)),
+                               np.asarray(want), rtol=2e-4, atol=2e-4)
     return {
         "path": plan.path,
+        "autotuned_path": plan_at.route_for_batch(BATCH).path,
+        "route_flipped": (plan_at.route_for_batch(BATCH)
+                          != plan.route_for_batch(BATCH)),
+        "autotuned_us": time_fn(autotuned, x, packed, iters=iters,
+                                warmup=warmup) * 1e6,
         "pallas_tiled": pallas_tiled_record(
             plan_p, apply_fn=plan_p.apply, args=(x, packed),
             iters=iters, warmup=warmup),
@@ -110,6 +130,8 @@ def main(print_csv=True, quick=False, json_path=JSON_PATH):
             rec["speedup_vs_naive"] = t["naive_us"] / t["planned_us"]
             rec["fused_vs_per_phase"] = t["per_phase_us"] / t["planned_us"]
             rec["plan_gain"] = t["unplanned_us"] / t["planned_us"]
+            rec["autotune_vs_heuristic"] = (t["planned_us"]
+                                           / t["autotuned_us"])
             records.append(rec)
             pt = t["pallas_tiled"]
             rows.append(csv_row(
@@ -123,14 +145,21 @@ def main(print_csv=True, quick=False, json_path=JSON_PATH):
                 + (f"@sp{tuple(pt['sp_tiles'])}" if pt["tiled"] else "")
                 + " "
                 f"unplanned_us={t['unplanned_us']:.1f} "
-                f"plan_gain={rec['plan_gain']:.2f}x"))
+                f"plan_gain={rec['plan_gain']:.2f}x "
+                f"autotuned={t['autotuned_path']}"
+                + ("*" if t["route_flipped"] else "")
+                + f"@{rec['autotune_vs_heuristic']:.2f}x"))
     dc = [r["fused_vs_per_phase"] for r in records if r["gan"] == "DCGAN"]
     geomean = geo_mean(dc)
+    geomean_at = geo_mean([r["autotune_vs_heuristic"] for r in records])
+    flipped = [r["name"] for r in records if r["route_flipped"]]
     payload = {
         "bench": "fig7", "batch": BATCH, "quick": quick,
         "backend": jax.default_backend(),
         "layers": records,
         "dcgan_geomean_fused_vs_per_phase": geomean,
+        "geomean_autotuned_vs_heuristic": geomean_at,
+        "routes_flipped": flipped,
     }
     if json_path:
         with open(json_path, "w") as f:
@@ -138,7 +167,9 @@ def main(print_csv=True, quick=False, json_path=JSON_PATH):
     if print_csv:
         for r in rows:
             print(r)
-        print(f"# dcgan_geomean_fused_vs_per_phase={geomean:.2f}x"
+        print(f"# dcgan_geomean_fused_vs_per_phase={geomean:.2f}x "
+              f"geomean_autotuned_vs_heuristic={geomean_at:.2f}x "
+              f"routes_flipped={flipped}"
               + (f" -> {json_path}" if json_path else ""))
     return payload
 

@@ -7,11 +7,10 @@ re-exported so benches import it from the same place as their timers.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import numpy as np
 
+from repro.core.autotune import Timing, measure_fn  # noqa: F401
 from repro.serving.metrics import format_stats, latency_stats  # noqa: F401
 
 
@@ -22,15 +21,19 @@ def time_fn(fn, *args, iters: int = 10, warmup: int = 3) -> float:
     source of interference (scheduler preemption, turbo/thermal shifts,
     co-tenant load) only ever adds time, so the minimum is the closest
     observable to the uncontended cost being compared.
+
+    The loop itself (block-until-ready inside the timed region, min +
+    median recorded) is ``repro.core.autotune.measure_fn`` — ONE
+    implementation shared between bench-time wall-clocks and the
+    autotuner's plan-time microbenchmarks; use ``time_stats`` when the
+    median is wanted alongside the min.
     """
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    return float(np.min(ts))
+    return measure_fn(fn, *args, iters=iters, warmup=warmup).min_s
+
+
+def time_stats(fn, *args, iters: int = 10, warmup: int = 3) -> Timing:
+    """Full ``Timing`` (min + median) from the shared measurement loop."""
+    return measure_fn(fn, *args, iters=iters, warmup=warmup)
 
 
 def csv_row(name: str, us: float, derived: str = "") -> str:

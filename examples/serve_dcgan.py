@@ -8,8 +8,15 @@ the tail and launching one jitted generator call per bucket.  Model load
 builds every conv plan and packs the weights ONCE; the server then only
 ever executes plan-time routes.
 
+With ``--autotune cache|measure`` the plans use measured routes from the
+per-host route cache (``--route-cache PATH``, default
+``$HUGE2_ROUTE_CACHE`` or ``~/.cache/huge2/route_cache.json``); the same
+cache persists the batcher's measured bucket costs, so a restarted server
+skips both the route microbenchmarks and the bucket cost measurements.
+
     PYTHONPATH=src python examples/serve_dcgan.py [--requests 64]
         [--rate 0] [--max-wait-ms 2] [--backend xla] [--small]
+        [--autotune off|cache|measure] [--route-cache PATH]
 """
 from __future__ import annotations
 
@@ -19,6 +26,7 @@ import time
 import jax
 import numpy as np
 
+from repro.core import autotune as at
 from repro.models import gan
 from repro.serving.image_batcher import DynamicImageBatcher
 from repro.serving.metrics import format_stats
@@ -39,10 +47,24 @@ def main():
     ap.add_argument("--backend", choices=("xla", "pallas"), default="xla")
     ap.add_argument("--small", action="store_true",
                     help="reduced 32px generator (CI smoke)")
+    ap.add_argument("--autotune", choices=("off", "cache", "measure"),
+                    default="off",
+                    help="measured routes: 'cache' = use cached winners only,"
+                         " 'measure' = microbenchmark on cache miss")
+    ap.add_argument("--route-cache", default=None,
+                    help="route/bucket-cost cache path (default "
+                         "$HUGE2_ROUTE_CACHE or ~/.cache/huge2)")
     args = ap.parse_args()
 
+    policy = None
+    cache = None
+    if args.autotune != "off":
+        policy = at.AutotunePolicy(mode=args.autotune,
+                                   cache_path=args.route_cache)
+        cache = at.open_cache(args.route_cache)
     layers = SMALL_LAYERS if args.small else gan.DCGAN_LAYERS
-    cfg = gan.GANConfig("dcgan", layers, backend=args.backend)
+    cfg = gan.GANConfig("dcgan", layers, backend=args.backend,
+                        autotune=policy)
     key = jax.random.PRNGKey(0)
     # model load: build every conv plan + pack weights ONCE, serve forever
     t_load = time.perf_counter()
@@ -54,15 +76,18 @@ def main():
           f"in {t_load * 1e3:.1f} ms "
           f"(plan build {sum(p.build_ms for p in plans):.2f} ms)")
 
+    cache_key = f"serve_dcgan/{cfg.name}{'-small' if args.small else ''}"
     batcher = DynamicImageBatcher(
         lambda z: gan.generator_apply(params, z, cfg),
-        max_wait_ms=args.max_wait_ms)
+        max_wait_ms=args.max_wait_ms, cache=cache, cache_key=cache_key)
     proto = np.zeros((cfg.z_dim,), np.float32)
     t0 = time.perf_counter()
-    batcher.warmup(proto)                  # compile every bucket up front
+    timed = batcher.warmup(proto)          # compile every bucket up front
     print(f"warmup: {len(batcher.buckets)} bucket executables compiled "
           f"in {time.perf_counter() - t0:.2f} s "
-          f"(buckets {batcher.buckets})")
+          f"(buckets {batcher.buckets}, "
+          f"{len(timed)} timed / {len(batcher.buckets) - len(timed)} "
+          f"from cache)")
 
     rng = np.random.default_rng(0)
     batcher.drive_open_loop(

@@ -8,19 +8,25 @@ weights, so serving never re-slices a kernel.
 
     PYTHONPATH=src python examples/serve_segnet.py [--requests 32]
         [--rate 0] [--max-wait-ms 2] [--full]
+        [--autotune off|cache|measure] [--route-cache PATH]
 
 ``--full`` serves the 64px/width-128 edge config; default is the tiny
-config so the CI smoke step finishes in seconds.
+config so the CI smoke step finishes in seconds.  ``--autotune`` switches
+the plans to measured routes backed by the per-host route cache
+(``--route-cache``), which also persists the batcher's bucket costs — a
+restarted server re-measures nothing.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import autotune as at
 from repro.models import segnet
 from repro.serving.image_batcher import DynamicImageBatcher
 from repro.serving.metrics import format_stats
@@ -34,8 +40,23 @@ def main():
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--full", action="store_true",
                     help="64px width-128 config instead of the tiny one")
+    ap.add_argument("--autotune", choices=("off", "cache", "measure"),
+                    default="off",
+                    help="measured routes: 'cache' = use cached winners only,"
+                         " 'measure' = microbenchmark on cache miss")
+    ap.add_argument("--route-cache", default=None,
+                    help="route/bucket-cost cache path (default "
+                         "$HUGE2_ROUTE_CACHE or ~/.cache/huge2)")
     args = ap.parse_args()
-    cfg = segnet.SEGNET if args.full else segnet.SEGNET_TINY
+
+    policy = None
+    cache = None
+    if args.autotune != "off":
+        policy = at.AutotunePolicy(mode=args.autotune,
+                                   cache_path=args.route_cache)
+        cache = at.open_cache(args.route_cache)
+    base = segnet.SEGNET if args.full else segnet.SEGNET_TINY
+    cfg = dataclasses.replace(base, autotune=policy)
 
     key = jax.random.PRNGKey(0)
     t0 = time.perf_counter()
@@ -50,13 +71,17 @@ def main():
         # logits -> per-pixel class ids; argmax rides inside the jit
         return jnp.argmax(segnet.segnet_apply(params, x, cfg), axis=-1)
 
-    batcher = DynamicImageBatcher(serve_fn, max_wait_ms=args.max_wait_ms)
+    cache_key = f"serve_segnet/{cfg.name}"
+    batcher = DynamicImageBatcher(serve_fn, max_wait_ms=args.max_wait_ms,
+                                  cache=cache, cache_key=cache_key)
     proto = np.zeros((cfg.in_hw, cfg.in_hw, cfg.in_c), np.float32)
     t0 = time.perf_counter()
-    batcher.warmup(proto)
+    timed = batcher.warmup(proto)
     print(f"warmup: {len(batcher.buckets)} bucket executables compiled "
           f"in {time.perf_counter() - t0:.2f} s "
-          f"(buckets {batcher.buckets})")
+          f"(buckets {batcher.buckets}, "
+          f"{len(timed)} timed / {len(batcher.buckets) - len(timed)} "
+          f"from cache)")
 
     rng = np.random.default_rng(0)
     batcher.drive_open_loop(

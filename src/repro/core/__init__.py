@@ -8,6 +8,7 @@ from repro.core.plan import (BATCH_BUCKETS, ConvPlan, ConvSpec, Route,
                              conv_spec, plan_cache_clear, plan_cache_info,
                              plan_conv)
 from repro.core.untangle import (untangled_conv2d, untangled_depthwise_conv1d)
+from repro.core.autotune import (AutotunePolicy, RouteCache, measure_fn)
 from repro.core import reference
 
 __all__ = [
@@ -17,4 +18,5 @@ __all__ = [
     "huge_dilated_conv2d", "untangled_conv2d", "untangled_depthwise_conv1d",
     "BATCH_BUCKETS", "ConvPlan", "ConvSpec", "Route", "conv_spec",
     "plan_conv", "plan_cache_info", "plan_cache_clear", "reference",
+    "AutotunePolicy", "RouteCache", "measure_fn",
 ]

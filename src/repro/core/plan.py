@@ -339,7 +339,11 @@ class Route:
     whole-plane VMEM residency (the small-plane fast path)."""
 
     batch: int
-    path: str                     # 'pallas'|'fused_plane'|'fused_tap'|'taps'
+    # 'pallas'|'fused_plane'|'fused_tap'|'taps', plus (transposed,
+    # autotune-only) 'per_phase' — the PR-1 per-phase executor promoted to
+    # a first-class route so the tuner can rank it (the heuristic never
+    # emits it; BENCH_fig7 shows it winning on some hosts, e.g. DC2)
+    path: str
     tiles: Pair | None            # (C_t, N_t) when path == 'pallas'
     fused_bwd: bool = True
     sp_tiles: Pair | None = None  # spatial tile when 'pallas' is tiled
@@ -465,6 +469,8 @@ class ConvPlan:
     # per-bucket routes, ascending by Route.batch (one per BATCH_BUCKETS)
     routes: tuple[Route, ...] = ()
     build_ms: float = 0.0
+    # True when the routes came from measurement (autotune), not heuristics
+    tuned: bool = False
     # memo for batches beyond the largest bucket (plans are cache
     # singletons, so this fills at most once per distinct oversize batch)
     _xl_routes: dict = dataclasses.field(default_factory=dict, repr=False)
@@ -490,6 +496,19 @@ class ConvPlan:
         if batch not in self._xl_routes:
             self._xl_routes[batch] = _route_exact(self, batch)
         return self._xl_routes[batch]
+
+    def with_routes(self, routes: tuple[Route, ...],
+                    tuned: bool = True) -> "ConvPlan":
+        """A sibling plan sharing every piece of compiled geometry but with
+        a replaced per-bucket route table (how the autotuner installs
+        measured winners, and how tests force a route).  The copy is its
+        own identity (fresh jit/vjp cache key) with an empty oversize-batch
+        memo."""
+        return ConvPlan(
+            spec=self.spec, out_hw=self.out_hw, phases=self.phases,
+            gpad=self.gpad, total_taps=self.total_taps, sum_uv=self.sum_uv,
+            uniform=self.uniform, bwd_pad=self.bwd_pad, dx_taps=self.dx_taps,
+            routes=tuple(routes), build_ms=self.build_ms, tuned=tuned)
 
     # -- weight layout -----------------------------------------------------
     def pack(self, kernel: jax.Array):
@@ -592,11 +611,26 @@ class ConvPlan:
         return _transposed_per_phase(self, x, self.as_superpack(packed))
 
 
-@functools.lru_cache(maxsize=4096)
-def plan_conv(spec: ConvSpec) -> ConvPlan:
+def plan_conv(spec: ConvSpec, autotune=None) -> ConvPlan:
     """Compile ``spec`` into a ``ConvPlan`` (LRU-cached; one build per live
-    site — the bound only matters for workloads cycling through thousands of
-    distinct shapes, which evict oldest-first rather than grow unbounded)."""
+    site).  ``autotune`` is an optional ``repro.core.autotune
+    .AutotunePolicy``: when set, the heuristic per-bucket routes are
+    replaced by measured winners — cached per-host results when available,
+    live microbenchmarks on a cache miss under ``mode='measure'`` — with
+    heuristic routes as the universal fallback (cold cache, unmeasurable
+    candidates, unreadable cache file)."""
+    plan = _plan_conv_heuristic(spec)
+    if autotune is None or getattr(autotune, "mode", "off") == "off":
+        return plan
+    from repro.core.autotune import autotune_plan
+    return autotune_plan(plan, autotune)
+
+
+@functools.lru_cache(maxsize=4096)
+def _plan_conv_heuristic(spec: ConvSpec) -> ConvPlan:
+    """The heuristic compile: geometry + analytic per-bucket routes (the
+    bound only matters for workloads cycling through thousands of distinct
+    shapes, which evict oldest-first rather than grow unbounded)."""
     t0 = time.perf_counter()
     itemsize = jnp.dtype(spec.dtype).itemsize
     h, w = spec.in_hw
@@ -686,11 +720,17 @@ def plan_conv(spec: ConvSpec) -> ConvPlan:
 
 
 def plan_cache_info():
-    return plan_conv.cache_info()
+    return _plan_conv_heuristic.cache_info()
 
 
 def plan_cache_clear():
-    plan_conv.cache_clear()
+    _plan_conv_heuristic.cache_clear()
+    # tuned plans / loaded route caches index into the heuristic plans;
+    # drop them together so patched-constant contexts rebuild both sides
+    import sys
+    autotune = sys.modules.get("repro.core.autotune")
+    if autotune is not None:
+        autotune.reset()
 
 
 # ---------------------------------------------------------------------------
@@ -857,11 +897,17 @@ def _transposed_fwd(plan: ConvPlan, x, packed, interpret=None):
     if plan.total_taps == 0:
         y = jnp.zeros((b, *plan.out_hw, spec.out_c), x.dtype)
         return y.reshape(lead + y.shape[1:])
-    xg = _global_plane(plan, x4)
     # the bucket's route was sized against the byte caps at plan time —
     # a large batch lands on a bucket whose plane-GEMM intermediate fits
     route = plan.route_for_batch(b)
     path = route.path
+    if path == "per_phase":
+        # autotune-only route: the per-phase executor measured faster than
+        # any fused whole-conv launch on this host (pads per phase, so it
+        # bypasses the global plane below)
+        y = _transposed_per_phase(plan, x4, packed)
+        return y.reshape(lead + y.shape[1:])
+    xg = _global_plane(plan, x4)
     if path == "pallas":
         from repro.kernels.untangled_conv import untangled_deconv2d_pallas
         y = untangled_deconv2d_pallas(

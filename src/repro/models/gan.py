@@ -19,16 +19,20 @@ holding HWIO kernels adapt via ``as_superpack``).
 
 The ``backend`` field of ``GANConfig`` is a plan policy ('xla' | 'pallas' |
 'auto') consumed at plan-build time; it is no longer threaded through the
-apply functions call-by-call.
+apply functions call-by-call.  ``autotune`` is the second plan policy: an
+optional ``repro.core.autotune.AutotunePolicy`` that replaces the heuristic
+per-bucket routes with measured winners (per-host cache hits at model load,
+live microbenchmarks on a miss) — see ``docs/ARCHITECTURE.md``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.autotune import AutotunePolicy
 from repro.core.plan import ConvPlan, ConvSpec, plan_conv
 from repro.layers import common as cm
 
@@ -72,6 +76,9 @@ class GANConfig:
     layers: tuple[DeconvLayer, ...]
     z_dim: int = 100
     backend: str = "xla"            # plan policy: 'xla' | 'pallas' | 'auto'
+    # measured-route policy (None = heuristic routes); model load pays any
+    # cache-miss microbenchmarks once, apply only ever sees tuned plans
+    autotune: Optional[AutotunePolicy] = None
 
 
 DCGAN = GANConfig("dcgan", DCGAN_LAYERS)
@@ -83,7 +90,8 @@ CGAN = GANConfig("cgan", CGAN_LAYERS, z_dim=110)   # z + 10-class condition
 # ---------------------------------------------------------------------------
 
 def generator_plans(cfg: GANConfig, dtype=jnp.float32) -> tuple[ConvPlan, ...]:
-    """Plans for every generator deconv site (cached; build cost paid once)."""
+    """Plans for every generator deconv site (cached; build cost paid once
+    — including any autotune microbenchmarks the config's policy asks for)."""
     plans = []
     for l in cfg.layers:
         plans.append(plan_conv(ConvSpec(
@@ -91,7 +99,8 @@ def generator_plans(cfg: GANConfig, dtype=jnp.float32) -> tuple[ConvPlan, ...]:
             out_c=l.out_c, kernel_hw=(l.kernel, l.kernel),
             strides=(l.stride, l.stride),
             padding=deconv_padding(l.kernel, l.stride),
-            dtype=str(jnp.dtype(dtype)), backend=cfg.backend)))
+            dtype=str(jnp.dtype(dtype)), backend=cfg.backend),
+            autotune=cfg.autotune))
     return tuple(plans)
 
 
@@ -106,7 +115,8 @@ def discriminator_plans(cfg: GANConfig,
             in_c=l.out_c, out_c=l.in_c, kernel_hw=(k, k),
             strides=(l.stride, l.stride),
             padding=((k // 2, (k - 1) // 2), (k // 2, (k - 1) // 2)),
-            dtype=str(jnp.dtype(dtype)), backend=cfg.backend)))
+            dtype=str(jnp.dtype(dtype)), backend=cfg.backend),
+            autotune=cfg.autotune))
     return tuple(plans)
 
 

@@ -23,10 +23,12 @@ a plan policy ('xla' | 'pallas' | 'auto') consumed at plan-build time.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.autotune import AutotunePolicy
 from repro.core.plan import ConvPlan, ConvSpec, plan_conv
 from repro.layers import common as cm
 
@@ -72,6 +74,8 @@ class SegNetConfig:
     width: int = 128
     num_classes: int = 21
     backend: str = "xla"            # plan policy: 'xla' | 'pallas' | 'auto'
+    # measured-route policy (None = heuristic routes)
+    autotune: Optional[AutotunePolicy] = None
 
     @property
     def layers(self) -> tuple[SegLayer, ...]:
@@ -105,7 +109,8 @@ def segnet_plans(cfg: SegNetConfig, dtype=jnp.float32) -> tuple[ConvPlan, ...]:
             strides=(l.stride, l.stride),
             padding=atrous_padding(l.kernel, l.dilation),
             dilation=(l.dilation, l.dilation),
-            dtype=str(jnp.dtype(dtype)), backend=cfg.backend)))
+            dtype=str(jnp.dtype(dtype)), backend=cfg.backend),
+            autotune=cfg.autotune))
     return tuple(plans)
 
 

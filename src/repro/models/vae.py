@@ -25,10 +25,12 @@ directly on the superpacked layout.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.autotune import AutotunePolicy
 from repro.core.plan import ConvPlan, ConvSpec, plan_conv
 from repro.layers import common as cm
 from repro.models.gan import DeconvLayer, deconv_padding
@@ -43,6 +45,8 @@ class VAEConfig:
     latent_dim: int = 64
     kernel: int = 4
     backend: str = "xla"            # plan policy: 'xla' | 'pallas' | 'auto'
+    # measured-route policy (None = heuristic routes)
+    autotune: Optional[AutotunePolicy] = None
 
     @property
     def feat_hw(self) -> int:
@@ -90,7 +94,8 @@ def encoder_plans(cfg: VAEConfig, dtype=jnp.float32) -> tuple[ConvPlan, ...]:
             kind="conv", in_hw=(l.in_hw, l.in_hw), in_c=l.in_c,
             out_c=l.out_c, kernel_hw=(k, k), strides=(l.stride, l.stride),
             padding=((k // 2, (k - 1) // 2), (k // 2, (k - 1) // 2)),
-            dtype=str(jnp.dtype(dtype)), backend=cfg.backend)))
+            dtype=str(jnp.dtype(dtype)), backend=cfg.backend),
+            autotune=cfg.autotune))
     return tuple(plans)
 
 
@@ -102,7 +107,8 @@ def decoder_plans(cfg: VAEConfig, dtype=jnp.float32) -> tuple[ConvPlan, ...]:
             out_c=l.out_c, kernel_hw=(l.kernel, l.kernel),
             strides=(l.stride, l.stride),
             padding=deconv_padding(l.kernel, l.stride),
-            dtype=str(jnp.dtype(dtype)), backend=cfg.backend)))
+            dtype=str(jnp.dtype(dtype)), backend=cfg.backend),
+            autotune=cfg.autotune))
     return tuple(plans)
 
 

@@ -28,6 +28,12 @@ with the bucket multiset minimizing total measured cost (a tiny
 coin-change DP, memoized per queue length).  Until costs are measured the
 policy degrades to round-up-to-nearest-bucket.
 
+The measured costs can be **persisted**: pass a ``repro.core.autotune``
+``RouteCache`` (plus a ``cache_key`` naming the served model) and the
+batcher preloads ``bucket_cost_s`` from the cache at construction and
+writes back any buckets ``warmup`` measures — a restarted server with a
+warm cache compiles its buckets but re-measures none of them.
+
 Data-parallel serving: pass a ``DistContext`` and the batcher constrains
 the batched input over the mesh's data axes inside the jitted call, so the
 padded bucket shards across devices under ``NamedSharding`` (weights are
@@ -71,12 +77,17 @@ class DynamicImageBatcher:
 
     def __init__(self, serve_fn: Callable, *,
                  buckets: Sequence[int] = BATCH_BUCKETS,
-                 max_wait_ms: float = 2.0, dist=None):
+                 max_wait_ms: float = 2.0, dist=None,
+                 cache=None, cache_key: Optional[str] = None):
         self.buckets = tuple(sorted(int(b) for b in buckets))
         if not self.buckets or self.buckets[0] < 1:
             raise ValueError(f"bad buckets {buckets}")
         self.max_wait_s = max_wait_ms / 1e3
         self.dist = dist
+        # bucket-cost persistence: a repro.core.autotune.RouteCache plus a
+        # key naming the served model (costs are per model + per host)
+        self.cache = cache
+        self.cache_key = cache_key
 
         def batched(x):
             if dist is not None:
@@ -88,6 +99,10 @@ class DynamicImageBatcher:
         self.done: list[ImageRequest] = []
         self.launches: list[tuple[int, int]] = []   # (bucket, live) per call
         self.bucket_cost_s: dict[int, float] = {}   # measured by warmup
+        if cache is not None and cache_key is not None:
+            self.bucket_cost_s = {
+                b: c for b, c in cache.get_bucket_costs(cache_key).items()
+                if b in self.buckets}
         self._sched_memo: dict[int, tuple[float, int]] = {0: (0.0, 0)}
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
@@ -105,27 +120,40 @@ class DynamicImageBatcher:
                 return b
         return self.buckets[-1]
 
-    def warmup(self, proto: Optional[np.ndarray] = None, *, iters: int = 2):
+    def warmup(self, proto: Optional[np.ndarray] = None, *, iters: int = 2,
+               force: bool = False) -> tuple[int, ...]:
         """Eagerly compile every bucket (zeros payload) so serving latency
         never includes a compile, and *measure* each bucket's launch cost
-        (min of ``iters``) for the cost-aware scheduler.  ``proto`` is one
-        request payload (shape/dtype template); defaults to the oldest
-        queued request's."""
+        (min of ``iters``) for the cost-aware scheduler.  Buckets whose cost
+        was preloaded from the route cache are compiled but NOT re-timed
+        unless ``force=True`` — a restarted server with a warm cache pays
+        zero measurement loops.  Newly measured costs are written back to
+        the cache (when one is attached).  ``proto`` is one request payload
+        (shape/dtype template); defaults to the oldest queued request's.
+        Returns the buckets that were actually timed."""
         if proto is None:
             if not self.queue:
                 raise ValueError("warmup needs a proto payload or a queued "
                                  "request for the shape")
             proto = self.queue[0].payload
+        timed = []
         for b in self.buckets:
             x = jax.numpy.asarray(np.zeros((b,) + proto.shape, proto.dtype))
             jax.block_until_ready(self._serve(x))       # compile
+            if b in self.bucket_cost_s and not force:
+                continue                                # cache hit: no timing
             ts = []
             for _ in range(iters):
                 t0 = time.perf_counter()
                 jax.block_until_ready(self._serve(x))
                 ts.append(time.perf_counter() - t0)
             self.bucket_cost_s[b] = min(ts)
+            timed.append(b)
         self._sched_memo = {0: (0.0, 0)}                # rebuild on new costs
+        if timed and self.cache is not None and self.cache_key is not None:
+            self.cache.put_bucket_costs(self.cache_key, self.bucket_cost_s)
+            self.cache.save()
+        return tuple(timed)
 
     def _first_launch_size(self, n: int) -> int:
         """Bucket of the next launch for a queue of ``n``: head of the

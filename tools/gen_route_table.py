@@ -13,9 +13,21 @@ Covered sites: the fig7 suite (Table-1 DCGAN + cGAN generators, the VAE
 decoder), the VAE encoder, every SegNet layer (strided front-end, atrous
 context, 1x1 head), and the BENCH_dilated layer suite — each planned under
 both explicit backends ('xla' and 'pallas'; 'auto' is excluded because its
-verdict depends on the host's jax.default_backend()).  Routes are pure
-plan-time arithmetic over the spec constants, so the table is identical on
-every host.
+verdict depends on the host's jax.default_backend()).
+
+The committed fixture snapshots **heuristic** routes ONLY: those are pure
+plan-time arithmetic over the spec constants, so *that* table is identical
+on every host.  Measured (autotuned) routes are explicitly per-host — they
+live in the ``repro.core.autotune`` route cache, never in this fixture.
+``--measured`` runs the autotuner's microbenchmarks over the same sites
+and *reports* the measured winners and their deltas against the fixture's
+heuristic picks (nothing is written)::
+
+    PYTHONPATH=src python tools/gen_route_table.py --measured [--buckets 1,4]
+
+The spec/route JSON records are ``autotune.spec_to_json`` /
+``autotune.route_to_json`` — ONE schema shared by this fixture and the
+per-host cache file.
 """
 from __future__ import annotations
 
@@ -81,6 +93,7 @@ def build_route_table():
     """The full table as a JSON-ready dict (deterministic ordering)."""
     import dataclasses
 
+    from repro.core.autotune import route_to_json, spec_to_json
     from repro.core.plan import BATCH_BUCKETS, plan_conv
 
     entries = []
@@ -90,21 +103,8 @@ def build_route_table():
             entries.append({
                 "name": name,
                 "backend": backend,
-                "spec": {
-                    "kind": spec.kind, "in_hw": list(spec.in_hw),
-                    "in_c": spec.in_c, "out_c": spec.out_c,
-                    "kernel_hw": list(spec.kernel_hw),
-                    "strides": list(spec.strides),
-                    "padding": [list(p) for p in spec.padding],
-                    "dilation": list(spec.dilation),
-                },
-                "routes": [{
-                    "batch": r.batch,
-                    "path": r.path,
-                    "tiles": list(r.tiles) if r.tiles else None,
-                    "sp_tiles": list(r.sp_tiles) if r.sp_tiles else None,
-                    "fused_bwd": r.fused_bwd,
-                } for r in plan.routes],
+                "spec": spec_to_json(spec),
+                "routes": [route_to_json(r) for r in plan.routes],
             })
     return {
         "generated_by": "PYTHONPATH=src python tools/gen_route_table.py",
@@ -114,7 +114,53 @@ def build_route_table():
     }
 
 
-def main():
+def report_measured(buckets=(1,), iters=5, warmup=2):
+    """``--measured``: microbenchmark the same sites and print the measured
+    winner vs the heuristic pick, per (site, backend, bucket).  Reporting
+    only — measured routes are per-host and belong in the autotune cache,
+    never in the committed fixture."""
+    import dataclasses
+
+    from repro.core.autotune import (AutotunePolicy, measure_bucket,
+                                     route_label)
+    from repro.core.plan import plan_conv
+
+    policy = AutotunePolicy(mode="measure", cache_path="", buckets=buckets,
+                            iters=iters, warmup=warmup)
+    n_flipped = 0
+    for name, spec in route_specs():
+        for backend in BACKENDS:
+            plan = plan_conv(dataclasses.replace(spec, backend=backend))
+            for b in buckets:
+                heur = plan.route_for_batch(b)
+                winner, timings = measure_bucket(plan, b, policy)
+                flip = winner != heur
+                n_flipped += flip
+                h_t = timings.get(route_label(heur))
+                w_t = timings.get(route_label(winner))
+                delta = (f" {h_t / w_t:.2f}x"
+                         if h_t and w_t and flip else "")
+                print(f"{name}/{backend} B={b}: "
+                      f"heuristic={route_label(heur)} "
+                      f"measured={route_label(winner)}"
+                      f"{' (FLIP' + delta + ')' if flip else ' (same)'}")
+    print(f"# {n_flipped} measured flips vs fixture (host-specific; "
+          f"NOT written to {FIXTURE.name})")
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--measured", action="store_true",
+                    help="report (don't commit) microbenchmarked winners "
+                         "vs the fixture's heuristic routes")
+    ap.add_argument("--buckets", default="1",
+                    help="comma-separated batch buckets for --measured")
+    args = ap.parse_args(argv)
+    if args.measured:
+        report_measured(tuple(int(b) for b in args.buckets.split(",")))
+        return
     table = build_route_table()
     FIXTURE.parent.mkdir(parents=True, exist_ok=True)
     FIXTURE.write_text(json.dumps(table, indent=1) + "\n")
