@@ -4,18 +4,22 @@ Prints ``name,us_per_call,derived`` CSV and writes machine-readable
 ``BENCH_fig7.json`` (per-layer planned/naive/per-phase µs + the
 fused-vs-per-phase speedup of the single-launch executor),
 ``BENCH_dilated.json`` (segmentation block suite: untangled vs the
-rhs-dilation baseline engine + the lax oracle), and ``BENCH_serve.json``
-(dynamic image batcher vs the fixed-batch serve loop) so the perf
-trajectory is tracked run over run.  See ``docs/BENCHMARKS.md`` for what
-every field means.  Run:
+rhs-dilation baseline engine + the lax oracle), ``BENCH_serve.json``
+(dynamic image batcher vs the fixed-batch serve loop), and
+``BENCH_slo.json`` (open-loop Poisson load through the SLO-aware control
+plane: per-class tail latency + goodput-under-SLO) so the perf trajectory
+is tracked run over run.  See ``docs/BENCHMARKS.md`` for what every field
+means.  Run:
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
                                            [--dilated-json PATH]
                                            [--serve-json PATH]
+                                           [--slo-json PATH]
 
 ``--quick`` keeps the oracle-checked Fig.-7, dilated, and serving
-wall-clocks (with short timing loops) so CI smoke still produces every
-JSON, and skips the remaining slow benches.
+wall-clocks (with short timing loops and 10x instead of 100x open-loop
+traffic) so CI smoke still produces every JSON, and skips the remaining
+slow benches.
 """
 from __future__ import annotations
 
@@ -32,6 +36,9 @@ def main() -> None:
                     help="where to write the dilated JSON ('' disables)")
     ap.add_argument("--serve-json", default="BENCH_serve.json",
                     help="where to write the serving JSON ('' disables)")
+    ap.add_argument("--slo-json", default="BENCH_slo.json",
+                    help="where to write the open-loop SLO JSON "
+                         "('' disables)")
     args = ap.parse_args()
 
     from benchmarks import (dilated_conv, fig7_speedup, fig8_memory,
@@ -47,6 +54,8 @@ def main() -> None:
                       json_path=args.dilated_json or None)
     print("# serving — dynamic image batcher vs fixed-batch loop")
     serve_bench.main(quick=args.quick, json_path=args.serve_json or None)
+    print("# serving — open-loop SLO/tail-latency harness (control plane)")
+    serve_bench.slo_main(quick=args.quick, json_path=args.slo_json or None)
     if not args.quick:
         from benchmarks import fig8_training
         print("# paper Fig 8 (right) — GAN training speedup (engine VJPs)")

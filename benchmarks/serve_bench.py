@@ -1,10 +1,11 @@
-"""Serving benchmark: the dynamic image batcher vs the fixed-batch PR-1
-serve loop, on the cGAN generator (paper Table 1), writing
-``BENCH_serve.json``.
+"""Serving benchmarks: (1) the dynamic image batcher vs the fixed-batch
+PR-1 serve loop (closed loop, ``BENCH_serve.json``) and (2) the open-loop
+SLO/tail-latency harness over the serving control plane
+(``BENCH_slo.json``), both on the cGAN generator (paper Table 1).
 
-Workload: a seeded trace of request *bursts* (geometric sizes, mostly 1-4
-requests — the edge-serving shape: many devices, small coincident queues —
-capped at 16, with two full-16 bursts for coverage), served closed-loop:
+**Closed loop** (``main``): a seeded trace of request *bursts* (geometric
+sizes, mostly 1-4 requests — the edge-serving shape: many devices, small
+coincident queues — capped at 16, with two full-16 bursts for coverage);
 each burst arrives when the server is free, and every request's latency is
 wall-clock from burst arrival to its launch completing.  Both servers run
 the identical jitted generator; only scheduling differs:
@@ -18,6 +19,21 @@ the identical jitted generator; only scheduling differs:
 The whole trace is repeated and the best run per server kept (min-of-N —
 the same noise-robust statistic as ``util.time_fn``).  Percentiles come
 from the one shared implementation in ``repro.serving.metrics``.
+
+**Open loop** (``slo_main``): rate-controlled Poisson arrivals — requests
+arrive on a wall-clock schedule *regardless* of server progress, so queue
+growth and tail latency are measured rather than hidden (the closed loop
+can never observe overload: it only offers work when the server is free).
+Traffic is 10x (``--quick``) / 100x the closed-loop trace's request count,
+split 70/30 into ``interactive``/``batch`` priority classes with
+SLOs scaled from the *measured* largest-bucket launch cost (so the bench
+means the same thing on any host speed).  Two phases run: ``nominal``
+(offered load 0.6x the measured capacity) and ``overload`` (1.6x — by
+construction the control plane must reject at admission and/or shed
+expired requests; those are counted separately from served ones, never
+silently dropped).  Per class, ``BENCH_slo.json`` reports p50/p95/p99 and
+**goodput under SLO**; every scheduler change is gated on these tails,
+not just throughput.  See docs/BENCHMARKS.md for every field.
 """
 from __future__ import annotations
 
@@ -30,12 +46,24 @@ import numpy as np
 
 from benchmarks.util import format_stats, latency_stats
 from repro.models import gan
+from repro.serving.control_plane import ControlPlane, ServeRequest
 from repro.serving.image_batcher import DynamicImageBatcher, ImageRequest
 
 JSON_PATH = "BENCH_serve.json"
+SLO_JSON_PATH = "BENCH_slo.json"
 FIXED_BATCH = 8            # the PR-1 serve_dcgan default
 BURSTS = 24
 BURST_CAP = 16
+# open-loop harness knobs: class mix, SLO multiples of the measured
+# largest-bucket launch cost, offered-load factors vs measured capacity
+CLASS_MIX = {"interactive": 0.7, "batch": 0.3}
+# SLO = multiple x measured largest-bucket launch cost.  The overload
+# backlog after N arrivals at load L is N*(1-1/L) requests ~= that many
+# service units over capacity; capacity cancels against the SLO's own
+# cost scaling, so these multiples put the overload phase past the
+# interactive deadline on ANY host speed while nominal stays inside it.
+SLO_COST_MULTIPLE = {"interactive": 3.0, "batch": 12.0}
+PHASES = {"nominal": 0.6, "overload": 1.6}
 
 
 def make_trace(rng) -> list[int]:
@@ -154,5 +182,124 @@ def main(print_csv=True, quick=False, json_path=JSON_PATH):
     return payload
 
 
+def drive_open_loop(cp: ControlPlane, model: str, z_dim: int, *,
+                    n_req: int, rate_rps: float, slo_ms: dict,
+                    seed: int = 0) -> float:
+    """Submit ``n_req`` Poisson arrivals at ``rate_rps`` on a wall-clock
+    schedule (open loop: arrivals never wait for the server), pumping the
+    control plane between arrivals, then drain.  Because one pump can
+    block for a whole launch, every arrival whose scheduled time passed
+    while the server was busy is flushed before the next pump, stamped
+    with its *scheduled* ``t_arrival`` — latency is measured from when
+    the request arrived, not from when the busy server got around to
+    noticing it (the difference IS the queueing delay an open-loop
+    harness exists to expose).  Returns the measured duration (first
+    scheduled arrival -> last completion)."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_rps, n_req)
+    classes = rng.choice(list(CLASS_MIX), n_req, p=list(CLASS_MIX.values()))
+    payloads = rng.standard_normal((n_req, z_dim)).astype(np.float32)
+    t0 = time.perf_counter()
+    arrivals = t0 + np.cumsum(gaps)
+    i = 0
+    while i < n_req or cp.pending():
+        now = time.perf_counter()
+        while i < n_req and arrivals[i] <= now:
+            cls = str(classes[i])
+            cp.submit(ServeRequest(rid=i, model=model,
+                                   payload=payloads[i], priority=cls,
+                                   slo_ms=slo_ms[cls],
+                                   t_arrival=float(arrivals[i])))
+            i += 1
+        cp.pump(drain=i == n_req)           # drain once arrivals stop
+    return time.perf_counter() - t0
+
+
+def slo_main(print_csv=True, quick=False, json_path=SLO_JSON_PATH):
+    """Open-loop tail-latency harness over the serving control plane."""
+    cfg = gan.CGAN
+    params, _ = gan.generator_init(jax.random.PRNGKey(0), cfg)
+    serve_fn = lambda z: gan.generator_apply(params, z, cfg)   # noqa: E731
+
+    # measured capacity: one warmed-up control plane per phase shares the
+    # bucket costs measured here (same jitted fn => same executables)
+    probe = DynamicImageBatcher(serve_fn)
+    probe.warmup(np.zeros((cfg.z_dim,), np.float32))
+    big = probe.buckets[-1]
+    unit_s = probe.bucket_cost_s[big]          # one largest-bucket launch
+    capacity_rps = big / unit_s
+    slo_ms = {c: m * unit_s * 1e3 for c, m in SLO_COST_MULTIPLE.items()}
+
+    n_pr4 = sum(make_trace(np.random.default_rng(7)))
+    mult = 10 if quick else 100
+    n_req = n_pr4 * mult
+
+    phases = {}
+    for phase, load in PHASES.items():
+        cp = ControlPlane(starvation_ms=50.0)
+        be = cp.register_image_model("cgan", serve_fn,
+                                     np.zeros((cfg.z_dim,), np.float32))
+        # reuse the probe's measured costs: phases measure scheduling and
+        # queueing, not re-measurement noise
+        be.batcher.bucket_cost_s = dict(probe.bucket_cost_s)
+        be.batcher._sched_memo = {0: (0.0, 0)}
+        be.warmup()                            # compile only, no timing
+        offered = load * capacity_rps
+        dur = drive_open_loop(cp, "cgan", cfg.z_dim, n_req=n_req,
+                              rate_rps=offered, slo_ms=slo_ms, seed=11)
+        st = cp.stats()
+        assert st["queued"] == 0, "drain left work behind"
+        assert (st["submitted"]
+                == st["served"] + st["rejected"] + st["shed"]), st
+        phases[phase] = {
+            "load_factor": load,
+            "offered_rps": offered,
+            "duration_s": dur,
+            "submitted": st["submitted"],
+            "served": st["served"],
+            "rejected": st["rejected"],
+            "shed": st["shed"],
+            "replayed_requests": st["replayed_requests"],
+            "goodput_rps": st["goodput_rps"],
+            "goodput_under_slo": st["goodput_under_slo"],
+            "per_class": st["per_class"],
+            "launches": st["per_model"]["cgan"]["launches"],
+            "pad_fraction": st["per_model"]["cgan"]["pad_fraction"],
+        }
+
+    payload = {
+        "bench": "slo", "quick": quick, "backend": jax.default_backend(),
+        "model": "cgan",
+        "requests_per_phase": n_req,
+        "requests_multiplier_vs_pr4_trace": mult,
+        "class_mix": CLASS_MIX,
+        "buckets": list(probe.buckets),
+        "bucket_cost_ms": {b: t * 1e3 for b, t in
+                           probe.bucket_cost_s.items()},
+        "capacity_rps_est": capacity_rps,
+        "slo_ms": slo_ms,
+        "phases": phases,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+    if print_csv:
+        for phase, ph in phases.items():
+            inter = ph["per_class"]["interactive"]
+            print(f"slo_{phase},{inter['p99_ms'] * 1e3:.1f},"
+                  f"load {ph['load_factor']:.1f}x  "
+                  f"goodput {ph['goodput_under_slo']:.2f} "
+                  f"({ph['served']} served / {ph['rejected']} rejected / "
+                  f"{ph['shed']} shed)  interactive "
+                  f"p50 {inter['p50_ms']:.1f} p95 {inter['p95_ms']:.1f} "
+                  f"p99 {inter['p99_ms']:.1f} ms")
+        print(f"# slo capacity {capacity_rps:.0f} req/s, slo "
+              f"interactive {slo_ms['interactive']:.1f} ms / batch "
+              f"{slo_ms['batch']:.1f} ms"
+              + (f" -> {json_path}" if json_path else ""))
+    return payload
+
+
 if __name__ == "__main__":
     main()
+    slo_main()

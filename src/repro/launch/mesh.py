@@ -9,20 +9,27 @@ then across the slow inter-pod links).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+# jax 0.4.x has no jax.sharding.AxisType (meshes are Auto by default);
+# pass axis_types only on versions that support it
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def _mesh(shape, axes):
+    if _AXIS_TYPE is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(_AXIS_TYPE.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
     """Small explicit mesh for CPU integration tests."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return _mesh((pod, data, model), ("pod", "data", "model"))
+    return _mesh((data, model), ("data", "model"))

@@ -60,15 +60,18 @@ def train(arch: str, *, reduced=True, steps=20, batch=8, seq=64,
     hb = Heartbeat(timeout=3600)
     losses = []
 
+    def restore_latest() -> int:
+        # run_with_restarts' explicit restore contract: reload the train
+        # state from the latest checkpoint, return the step to resume at
+        nonlocal state
+        assert ckpt is not None, "failure without checkpointing"
+        step0 = ckpt.latest_step() or 0
+        state = ckpt.restore(state, step=step0)
+        print(f"[restart] restored step {step0}")
+        return step0
+
     def loop(start_step: int) -> int:
         nonlocal state
-        if start_step == -1:           # restart: restore latest checkpoint
-            assert ckpt is not None, "failure without checkpointing"
-            step0 = ckpt.latest_step() or 0
-            state = ckpt.restore(state, step=step0)
-            print(f"[restart] restored step {step0}")
-        else:
-            step0 = start_step
         s = int(np.asarray(jax.device_get(state["step"])))
         while s < steps:
             batch_np = pipe.batch_at(s)
@@ -92,13 +95,16 @@ def train(arch: str, *, reduced=True, steps=20, batch=8, seq=64,
             ckpt.wait()
         return s
 
+    restore = restore_latest if ckpt else None
     if mesh_ctx is not None:
         with mesh_ctx:
-            final = run_with_restarts(loop, on_restart=lambda n, e: print(
-                f"[fault] restart {n}: {e}"))
+            final = run_with_restarts(loop, restore=restore,
+                                      on_restart=lambda n, e: print(
+                                          f"[fault] restart {n}: {e}"))
     else:
-        final = run_with_restarts(loop, on_restart=lambda n, e: print(
-            f"[fault] restart {n}: {e}"))
+        final = run_with_restarts(loop, restore=restore,
+                                  on_restart=lambda n, e: print(
+                                      f"[fault] restart {n}: {e}"))
     return losses, final
 
 

@@ -5,8 +5,11 @@ At 1000+ nodes the dominant events are (a) hard node loss — handled by
 checkpoint/restart onto a (possibly smaller) mesh, and (b) stragglers —
 handled by detection + operator alerting / re-scheduling.  On a single-host
 CPU run these are *simulated*: the monitor watches wall-clock per step and
-the injector raises at a chosen step, which the driver turns into a
-restore-from-latest (see examples/lm_train.py and tests/test_fault.py).
+the injector raises at a chosen step, which the training driver turns into
+a restore-from-latest (``launch/train.py``) and the serving control plane
+turns into re-queue + replay (``serving/control_plane.py``).  Unit
+coverage for these primitives lives in tests/test_fault.py; the serving
+replay integration test is tests/test_control_plane.py.
 """
 from __future__ import annotations
 
@@ -81,15 +84,23 @@ class Heartbeat:
 
 def run_with_restarts(train_loop: Callable[[int], int], *,
                       max_restarts: int = 3,
-                      on_restart: Optional[Callable[[int, Exception], None]] = None
-                      ) -> int:
+                      on_restart: Optional[Callable[[int, Exception], None]] = None,
+                      restore: Optional[Callable[[], int]] = None,
+                      initial_step: int = 0) -> int:
     """Drive ``train_loop(start_step) -> final_step`` with restart-on-failure.
 
-    ``train_loop`` must be resumable from a checkpointed step (our data
-    pipeline is keyed by step, so resume is exact).
+    The explicit restore contract: the first attempt enters at
+    ``initial_step``.  After a ``NodeFailure`` (and ``on_restart``), the
+    driver calls ``restore()`` and re-enters ``train_loop`` at the step it
+    returns — e.g. ``lambda: ckpt.latest_step() or 0``; the callback may
+    also restore state it closes over (``launch/train.py`` reloads the
+    train state there).  Without a ``restore`` callback, restarts re-enter
+    at ``initial_step`` — only correct for loops that rebuild all state
+    from the start step (our data pipeline is keyed by step, so resume is
+    exact either way).
     """
     restarts = 0
-    start = 0
+    start = initial_step
     while True:
         try:
             return train_loop(start)
@@ -99,4 +110,4 @@ def run_with_restarts(train_loop: Callable[[int], int], *,
                 raise
             if on_restart is not None:
                 on_restart(restarts, e)
-            start = -1   # sentinel: loop restores from latest checkpoint
+            start = restore() if restore is not None else initial_step

@@ -3,7 +3,7 @@ the static-shape JAX world).
 
 The server keeps a fixed pool of B cache *slots* sharing one jitted
 ``decode_step``.  Requests join mid-flight whenever a slot frees: the
-prompt is prefillied token-by-token into the slot's cache region while other
+prompt is prefilled token-by-token into the slot's cache region while other
 slots keep decoding (all slots advance together each step — the classic
 static-batch continuous scheduler).  Per-slot position counters live in a
 vector so one jit covers every occupancy mix.

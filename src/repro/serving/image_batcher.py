@@ -38,6 +38,12 @@ Data-parallel serving: pass a ``DistContext`` and the batcher constrains
 the batched input over the mesh's data axes inside the jitted call, so the
 padded bucket shards across devices under ``NamedSharding`` (weights are
 sharded at init by the model's ``dist``-aware ``*_init``).
+
+Under the SLO-aware control plane (``serving/control_plane.py``) this
+batcher is no longer a peer entry point but the *launch engine* of an
+``ImageBackend``: the control plane owns admission/priorities/deadlines
+and calls ``execute`` directly; ``rebind_dist`` is its elastic-degrade
+hook after replica loss.
 """
 from __future__ import annotations
 
@@ -83,18 +89,11 @@ class DynamicImageBatcher:
         if not self.buckets or self.buckets[0] < 1:
             raise ValueError(f"bad buckets {buckets}")
         self.max_wait_s = max_wait_ms / 1e3
-        self.dist = dist
         # bucket-cost persistence: a repro.core.autotune.RouteCache plus a
         # key naming the served model (costs are per model + per host)
         self.cache = cache
         self.cache_key = cache_key
-
-        def batched(x):
-            if dist is not None:
-                x = dist.constrain(x, dist.image_spec())
-            return serve_fn(x)
-
-        self._serve = jax.jit(batched)
+        self.rebind_dist(dist, serve_fn)
         self.queue: deque[ImageRequest] = deque()
         self.done: list[ImageRequest] = []
         self.launches: list[tuple[int, int]] = []   # (bucket, live) per call
@@ -106,6 +105,27 @@ class DynamicImageBatcher:
         self._sched_memo: dict[int, tuple[float, int]] = {0: (0.0, 0)}
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
+
+    def rebind_dist(self, dist, serve_fn: Optional[Callable] = None):
+        """(Re-)jit the serve closure under ``dist`` — the elastic-degrade
+        path: after replica loss the control plane shrinks the mesh and
+        rebinds every backend to the surviving data-parallel extent.
+        Bucket executables recompile lazily on the next launch; measured
+        costs are kept (same kernels, fewer replicas — ``warmup(force=
+        True)`` re-measures).  ``serve_fn`` defaults to the current one
+        (pass a rebuilt closure when params were re-placed via
+        ``elastic.restore_on_mesh``)."""
+        self.dist = dist
+        if serve_fn is not None:
+            self._serve_fn = serve_fn
+        fn = self._serve_fn
+
+        def batched(x):
+            if dist is not None:
+                x = dist.constrain(x, dist.image_spec())
+            return fn(x)
+
+        self._serve = jax.jit(batched)
 
     # -- client API ----------------------------------------------------------
     def submit(self, req: ImageRequest):
@@ -210,22 +230,32 @@ class DynamicImageBatcher:
                     time.sleep(min(wait, 1e-3))
         return self.done
 
-    def _launch(self, reqs: list[ImageRequest],
-                bucket: Optional[int] = None) -> list[ImageRequest]:
-        bucket = self.bucket_for(len(reqs)) if bucket is None else bucket
-        batch = np.stack([r.payload for r in reqs])
-        if len(reqs) < bucket:                       # pad the tail
-            pad = np.zeros((bucket - len(reqs),) + batch.shape[1:],
+    def execute(self, rows: Sequence[np.ndarray],
+                bucket: Optional[int] = None) -> np.ndarray:
+        """Pad ``rows`` up to ``bucket`` and run ONE jitted launch,
+        returning the live output rows with no request bookkeeping — the
+        control plane's entry point (``serving.control_plane`` owns its
+        own queues and uses this batcher purely as the launch engine).
+        The launch is still recorded in ``launches`` so pad-fraction
+        stats cover both callers."""
+        bucket = self.bucket_for(len(rows)) if bucket is None else bucket
+        batch = np.stack([np.asarray(r) for r in rows])
+        if len(rows) < bucket:                       # pad the tail
+            pad = np.zeros((bucket - len(rows),) + batch.shape[1:],
                            batch.dtype)
             batch = np.concatenate([batch, pad])
         out = jax.block_until_ready(self._serve(jax.numpy.asarray(batch)))
-        out = np.asarray(out)
+        self.launches.append((bucket, len(rows)))
+        return np.asarray(out)[:len(rows)]
+
+    def _launch(self, reqs: list[ImageRequest],
+                bucket: Optional[int] = None) -> list[ImageRequest]:
+        out = self.execute([r.payload for r in reqs], bucket)
         now = time.perf_counter()
         for i, r in enumerate(reqs):
             r.out = out[i]
             r.t_done = now
         self.done.extend(reqs)
-        self.launches.append((bucket, len(reqs)))
         self._t_last = now
         return reqs
 

@@ -1,0 +1,368 @@
+"""SLO-aware control plane: admission, shed, priority/starvation,
+backfill, multi-model routing, straggler plumbing, elastic degrade, and
+the acceptance fault-injection integration tests — device loss mid-batch
+must re-queue + replay with zero drops, zero duplicates, and responses
+bit-equal to a fault-free run (image bucket launches AND LM decode)."""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import segnet, transformer as tfm
+from repro.runtime.fault import FailureInjector
+from repro.serving.control_plane import ControlPlane, ServeRequest
+
+ECHO_COSTS = {1: 1e-4, 4: 2e-4, 16: 5e-4, 64: 1e-3}
+
+
+def echo_plane(*, buckets=(1, 4, 16, 64), costs=None, **kw):
+    """Control plane over a trivially-verifiable jitted backend (x * 2)."""
+    cp = ControlPlane(**kw)
+    be = cp.register_image_model("echo", lambda x: x * 2.0,
+                                 np.zeros((4,), np.float32),
+                                 buckets=buckets)
+    if costs is not None:
+        be.batcher.bucket_cost_s = {b: c for b, c in costs.items()
+                                    if b in be.batcher.buckets}
+        be.batcher._sched_memo = {0: (0.0, 0)}
+    return cp, be
+
+
+def payloads(n, dim=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal(dim).astype(np.float32) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# admission + shed
+# ---------------------------------------------------------------------------
+
+def test_admission_rejects_when_backlog_blows_slo():
+    cp, _ = echo_plane(costs=ECHO_COSTS)
+    for i, z in enumerate(payloads(16)):          # backlog: 16 * >=0.1 ms
+        assert cp.submit(ServeRequest(rid=i, model="echo", payload=z))
+    late = ServeRequest(rid=99, model="echo", payload=payloads(1)[0],
+                        slo_ms=0.01)              # deadline < backlog estimate
+    assert not cp.submit(late)
+    assert late.status == "rejected" and late.reason.startswith("admission:")
+    ok = ServeRequest(rid=100, model="echo", payload=payloads(1)[0],
+                      slo_ms=10_000.0)
+    assert cp.submit(ok)                          # generous slo admits
+    cp.run()
+    st = cp.stats()
+    assert st["rejected"] == 1 and st["served"] == 17
+    assert st["submitted"] == st["served"] + st["rejected"] + st["shed"]
+
+
+def test_admission_permissive_without_measured_costs():
+    cp, be = echo_plane()                         # no costs measured yet
+    assert not be.batcher.bucket_cost_s
+    assert cp.submit(ServeRequest(rid=0, model="echo",
+                                  payload=payloads(1)[0], slo_ms=1e-6))
+    assert cp.queues["echo"]["interactive"]
+
+
+def test_admission_disabled_never_rejects():
+    cp, _ = echo_plane(costs=ECHO_COSTS, admission=False)
+    for i, z in enumerate(payloads(32)):
+        assert cp.submit(ServeRequest(rid=i, model="echo", payload=z,
+                                      slo_ms=1e-6))
+    assert cp.stats()["rejected"] == 0
+
+
+def test_shed_on_expiry_before_launch():
+    cp, _ = echo_plane()
+    expired = ServeRequest(rid=0, model="echo", payload=payloads(1)[0],
+                           slo_ms=1.0, t_arrival=time.perf_counter() - 1.0)
+    live = ServeRequest(rid=1, model="echo", payload=payloads(1, seed=1)[0],
+                        slo_ms=60_000.0)
+    cp.run([expired, live])
+    assert expired.status == "shed" and expired.reason.startswith("shed:")
+    assert expired.out is None                    # never computed
+    assert live.status == "served" and live.in_slo
+    st = cp.stats()
+    assert st["shed"] == 1 and st["served"] == 1 and st["queued"] == 0
+    assert st["per_class"]["interactive"]["shed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# priority, starvation bound, backfill
+# ---------------------------------------------------------------------------
+
+def test_interactive_launches_before_fresh_batch():
+    cp, _ = echo_plane(buckets=(1,))
+    b = ServeRequest(rid=0, model="echo", payload=payloads(1)[0],
+                     priority="batch")
+    i = ServeRequest(rid=1, model="echo", payload=payloads(1, seed=1)[0],
+                     priority="interactive")
+    cp.run([b, i])                                # batch arrived first...
+    assert [r.rid for r in cp.done] == [1, 0]     # ...interactive still wins
+
+
+def test_starvation_bound_flips_to_batch():
+    cp, _ = echo_plane(buckets=(1,), starvation_ms=50.0)
+    old_batch = ServeRequest(rid=0, model="echo", payload=payloads(1)[0],
+                             priority="batch",
+                             t_arrival=time.perf_counter() - 1.0)
+    fresh = ServeRequest(rid=1, model="echo",
+                         payload=payloads(1, seed=1)[0])
+    cp.run([old_batch, fresh])
+    assert [r.rid for r in cp.done] == [0, 1]     # starved batch goes first
+
+
+def test_launch_backfills_other_class():
+    cp, be = echo_plane(buckets=(1, 4))
+    reqs = [ServeRequest(rid=i, model="echo", payload=z,
+                         priority="interactive" if i < 3 else "batch")
+            for i, z in enumerate(payloads(4))]
+    cp.run(reqs)
+    # one bucket-4 launch: 3 interactive + 1 batch backfilled into the pad
+    assert be.batcher.launches == [(4, 4)]
+    assert cp.stats()["per_model"]["echo"]["pad_fraction"] == 0.0
+    assert sorted(r.rid for r in cp.done) == [0, 1, 2, 3]
+
+
+def test_bad_priority_and_unknown_model_raise():
+    cp, _ = echo_plane()
+    with pytest.raises(ValueError, match="priority"):
+        ServeRequest(rid=0, model="echo", payload=payloads(1)[0],
+                     priority="realtime")
+    with pytest.raises(ValueError, match="unknown model"):
+        cp.submit(ServeRequest(rid=0, model="nope", payload=payloads(1)[0]))
+    with pytest.raises(ValueError, match="already registered"):
+        cp.register_image_model("echo", lambda x: x,
+                                np.zeros((4,), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# multi-model hosting
+# ---------------------------------------------------------------------------
+
+def test_multi_model_routing_and_per_model_stats():
+    cp = ControlPlane()
+    cp.register_image_model("x2", lambda x: x * 2.0,
+                            np.zeros((4,), np.float32), buckets=(1, 4))
+    cp.register_image_model("x3", lambda x: x * 3.0,
+                            np.zeros((4,), np.float32), buckets=(1, 4))
+    zs = payloads(8)
+    cp.run([ServeRequest(rid=i, model="x2" if i % 2 == 0 else "x3",
+                         payload=z) for i, z in enumerate(zs)])
+    assert len(cp.done) == 8 and cp.pending() == 0
+    for r in cp.done:
+        np.testing.assert_array_equal(
+            r.out, zs[r.rid] * (2.0 if r.model == "x2" else 3.0))
+    pm = cp.stats()["per_model"]
+    assert pm["x2"]["served"] == 4 and pm["x3"]["served"] == 4
+
+
+def test_edf_across_models_picks_earliest_deadline():
+    cp = ControlPlane()
+    cp.register_image_model("a", lambda x: x + 1.0,
+                            np.zeros((4,), np.float32), buckets=(1,))
+    cp.register_image_model("b", lambda x: x - 1.0,
+                            np.zeros((4,), np.float32), buckets=(1,))
+    # model b's head has the earlier deadline: it must launch first even
+    # though a's request arrived first
+    cp.submit(ServeRequest(rid=0, model="a", payload=payloads(1)[0],
+                           slo_ms=60_000.0))
+    cp.submit(ServeRequest(rid=1, model="b", payload=payloads(1, seed=1)[0],
+                           slo_ms=5_000.0))
+    done = cp.pump(drain=True)
+    assert [r.rid for r in done] == [1]
+    cp.run()
+    assert sorted(r.rid for r in cp.done) == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# fault injection: re-queue + replay (the acceptance tests)
+# ---------------------------------------------------------------------------
+
+def test_fault_replay_echo_bit_equal_zero_drops_zero_dups():
+    zs = payloads(24)
+    reqs = lambda: [ServeRequest(rid=i, model="echo", payload=z)  # noqa: E731
+                    for i, z in enumerate(zs)]
+    ref, _ = echo_plane(costs=ECHO_COSTS)
+    ref.run(reqs())
+    # kill the first launch mid-batch: its requests re-queue + replay
+    cp, _ = echo_plane(costs=ECHO_COSTS,
+                       injector=FailureInjector((1,)))
+    cp.run(reqs())
+    st = cp.stats()
+    assert st["faults"]["events"] == 1
+    assert st["faults"]["records"][0]["live"] == 16   # the bucket-16 launch
+    assert st["replayed_requests"] == 16
+    assert st["served"] == 24 and st["queued"] == 0   # zero drops
+    rids = [r.rid for r in cp.done]
+    assert len(rids) == len(set(rids))                # zero duplicates
+    got, want = cp.results(), ref.results()
+    assert sorted(got) == sorted(want)
+    for rid in got:                                   # bit-equal replay
+        np.testing.assert_array_equal(got[rid], want[rid])
+
+
+def test_fault_replay_preserves_arrival_order_and_priority():
+    zs = payloads(4)
+    cp, _ = echo_plane(buckets=(1, 4), injector=FailureInjector((1,)))
+    reqs = [ServeRequest(rid=i, model="echo", payload=z,
+                         priority="interactive" if i < 2 else "batch")
+            for i, z in enumerate(zs)]
+    cp.run(reqs)
+    # the killed launch's requests went back to the FRONT of their own
+    # class queues in arrival order, so the replay serves rid order again
+    assert sorted(r.rid for r in cp.done) == [0, 1, 2, 3]
+    assert all(r.replays == 1 for r in cp.done)
+    by_rid = {r.rid: r for r in cp.done}
+    assert by_rid[2].priority == "batch"              # class survived replay
+
+
+def test_fault_replay_segnet_integration_bit_equal():
+    """Device loss mid-batch on a real planned model: the second bucket
+    launch dies, its live requests re-queue + replay, and every response
+    is bit-equal to the fault-free reference run."""
+    cfg = segnet.SEGNET_TINY
+    params, _ = segnet.segnet_init(jax.random.PRNGKey(0), cfg)
+
+    def serve_fn(x):
+        return jnp.argmax(segnet.segnet_apply(params, x, cfg), axis=-1)
+
+    proto = np.zeros((cfg.in_hw, cfg.in_hw, cfg.in_c), np.float32)
+    rng = np.random.default_rng(0)
+    xs = [rng.uniform(-1, 1, proto.shape).astype(np.float32)
+          for _ in range(8)]
+    reqs = lambda: [ServeRequest(rid=i, model="seg", payload=x)  # noqa: E731
+                    for i, x in enumerate(xs)]
+
+    ref = ControlPlane()
+    ref.register_image_model("seg", serve_fn, proto, buckets=(1, 4))
+    ref.run(reqs())
+    cp = ControlPlane(injector=FailureInjector((2,)))
+    cp.register_image_model("seg", serve_fn, proto, buckets=(1, 4))
+    cp.run(reqs())
+
+    st = cp.stats()
+    assert st["faults"]["events"] == 1 and st["replayed_requests"] == 4
+    assert st["served"] == 8 and st["queued"] == 0
+    rids = [r.rid for r in cp.done]
+    assert len(rids) == len(set(rids))
+    got, want = cp.results(), ref.results()
+    assert sorted(got) == sorted(want) == list(range(8))
+    for rid in got:
+        np.testing.assert_array_equal(got[rid], want[rid])
+
+
+def test_fault_replay_lm_decode_bit_equal():
+    """NodeFailure mid-decode evicts every live slot; the control plane
+    re-queues the prompts and the replayed greedy decode produces tokens
+    bit-equal to a fault-free run (deterministic argmax)."""
+    cfg = registry.get_reduced("llama3.2-1b")
+    params, _ = tfm.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, p).astype(np.int32)
+               for p in (3, 5, 2, 4)]
+    reqs = lambda: [ServeRequest(rid=i, model="lm", payload=p,  # noqa: E731
+                                 max_new=4) for i, p in enumerate(prompts)]
+
+    ref = ControlPlane()
+    ref.register_lm_model("lm", cfg, params, slots=2, max_len=16)
+    ref.run(reqs())
+    cp = ControlPlane(injector=FailureInjector((3,)))
+    be = cp.register_lm_model("lm", cfg, params, slots=2, max_len=16)
+    cp.run(reqs())
+
+    st = cp.stats()
+    assert st["faults"]["events"] == 1
+    assert st["replayed_requests"] >= 1
+    assert st["served"] == 4 and st["queued"] == 0 and not be.active()
+    rids = [r.rid for r in cp.done]
+    assert len(rids) == len(set(rids))
+    got, want = cp.results(), ref.results()
+    assert sorted(got) == sorted(want) == list(range(4))
+    for rid in got:
+        np.testing.assert_array_equal(got[rid], want[rid])
+    assert st["per_model"]["lm"]["steps"] > 0
+    assert st["per_model"]["lm"]["step_cost_ms"] > 0
+
+
+def test_duplicate_commit_guard():
+    cp, _ = echo_plane()
+    r = ServeRequest(rid=7, model="echo", payload=payloads(1)[0])
+    cp._commit(dataclasses.replace(r))
+    with pytest.raises(AssertionError, match="answered twice"):
+        cp._commit(dataclasses.replace(r))
+
+
+# ---------------------------------------------------------------------------
+# stragglers + elastic degrade
+# ---------------------------------------------------------------------------
+
+def test_straggler_alert_surfaces_in_stats():
+    cp, _ = echo_plane(straggler_warmup=3)
+    for _ in range(10):
+        cp._observe("echo", 16, 0.01)
+    cp._observe("echo", 16, 1.0)                  # 100x spike on one bucket
+    for _ in range(10):
+        cp._observe("echo", 4, 0.01)              # healthy bucket
+    st = cp.stats()["stragglers"]
+    assert st["events"] == 1 and st["slow_buckets"] == ["echo/b16"]
+
+
+def test_degrade_then_serve():
+    cp, _ = echo_plane()
+    mesh = cp.degrade(1)                          # all but one replica lost
+    assert mesh.shape["data"] == 1
+    zs = payloads(4)
+    cp.run([ServeRequest(rid=i, model="echo", payload=z)
+            for i, z in enumerate(zs)])
+    assert len(cp.done) == 4
+    for r in cp.done:
+        np.testing.assert_array_equal(r.out, zs[r.rid] * 2.0)
+    deg = cp.stats()["faults"]["degraded"]
+    assert deg["devices_left"] == 1
+
+
+def test_on_fault_hook_can_degrade():
+    calls = []
+    cp, _ = echo_plane(injector=FailureInjector((1,)),
+                       on_fault=lambda plane, err: calls.append(
+                           plane.degrade(1)))
+    cp.run([ServeRequest(rid=i, model="echo", payload=z)
+            for i, z in enumerate(payloads(4))])
+    assert len(calls) == 1                        # rung two reached
+    assert len(cp.done) == 4                      # served on the shrunk mesh
+
+
+# ---------------------------------------------------------------------------
+# accounting
+# ---------------------------------------------------------------------------
+
+def test_conservation_and_goodput_accounting():
+    cp, _ = echo_plane(costs=ECHO_COSTS)
+    reqs = [ServeRequest(rid=i, model="echo", payload=z,
+                         slo_ms=0.01 if i % 3 == 0 else 60_000.0)
+            for i, z in enumerate(payloads(30))]
+    cp.run(reqs)
+    st = cp.stats()
+    assert st["queued"] == 0
+    assert st["submitted"] == 30
+    assert st["submitted"] == st["served"] + st["rejected"] + st["shed"]
+    assert st["rejected"] + st["shed"] > 0        # tight slos did fail
+    good = sum(1 for r in cp.done if r.in_slo is not False)
+    assert st["goodput_under_slo"] == pytest.approx(good / 30)
+    for cls in ("interactive", "batch"):
+        assert set(st["per_class"][cls]) >= {
+            "p50_ms", "p95_ms", "p99_ms", "slo_miss",
+            "rejected", "shed", "goodput_rps", "goodput_under_slo"}
+
+
+def test_no_slo_requests_never_rejected_or_shed():
+    cp, _ = echo_plane(costs=ECHO_COSTS)
+    cp.run([ServeRequest(rid=i, model="echo", payload=z)
+            for i, z in enumerate(payloads(70))])
+    st = cp.stats()
+    assert st["served"] == 70 and st["rejected"] == 0 and st["shed"] == 0
+    assert st["goodput_under_slo"] == 1.0
+    assert all(r.in_slo is None for r in cp.done)

@@ -1,0 +1,130 @@
+"""Unit coverage for the fault-tolerance primitives in runtime/fault.py:
+EWMA straggler detection, deterministic failure injection, the heartbeat
+watchdog, and the restart driver's explicit restore contract.  The
+serving-side replay integration test lives in tests/test_control_plane.py.
+"""
+import pytest
+
+from repro.runtime.fault import (FailureInjector, Heartbeat, NodeFailure,
+                                 StragglerMonitor, run_with_restarts)
+
+# ---------------------------------------------------------------------------
+# StragglerMonitor
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_warmup_window_never_flags():
+    m = StragglerMonitor(warmup=5, k=3.0)
+    # even a wild spike inside the warmup window must not flag: the
+    # monitor has no variance estimate yet
+    assert not m.record(0, 0.1)
+    assert not m.record(1, 5.0)
+    assert not m.record(2, 0.1)
+    assert not m.events
+
+
+def test_straggler_sub_noise_jitter_never_flags():
+    m = StragglerMonitor(warmup=3, k=3.0)
+    # jitter within the 5%-of-mean stddev floor: 0.1 s +- 0.4% never
+    # exceeds mean + 3 * max(std, 0.005)
+    for s in range(200):
+        assert not m.record(s, 0.1 + 0.0004 * (s % 2))
+    assert not m.events
+
+
+def test_straggler_monitor_flags_slow_step():
+    m = StragglerMonitor(warmup=3, k=3.0)
+    for s in range(10):
+        m.record(s, 0.1 + 0.001 * (s % 2))
+    assert not m.events
+    assert m.record(10, 1.5)          # 15x slower
+    assert m.events
+    step, dt, _mean = m.events[0]
+    assert (step, dt) == (10, 1.5)
+
+
+def test_straggler_recovers_after_flagged_spike():
+    m = StragglerMonitor(warmup=3, k=3.0)
+    for s in range(10):
+        m.record(s, 0.1)
+    assert m.record(10, 1.5)
+    # the spike moved the EWMA mean up; steady steps settle back down
+    # and stop flagging
+    flags = [m.record(11 + s, 0.1) for s in range(20)]
+    assert not any(flags[5:])
+
+
+# ---------------------------------------------------------------------------
+# FailureInjector / Heartbeat
+# ---------------------------------------------------------------------------
+
+
+def test_failure_injector_fires_once_per_step():
+    inj = FailureInjector((3, 5))
+    inj.check(0)
+    with pytest.raises(NodeFailure):
+        inj.check(3)
+    inj.check(3)                      # already fired: replay passes
+    with pytest.raises(NodeFailure):
+        inj.check(5)
+    inj.check(5)
+    assert inj.fired == {3, 5}
+
+
+def test_heartbeat_beat_and_expiry():
+    hb = Heartbeat(timeout=1e4)
+    assert hb.beat() >= 0.0
+    assert not hb.expired()
+    hb.last -= 2e4                    # pretend the last beat was long ago
+    assert hb.expired()
+    hb.beat()                         # beating un-expires the watchdog
+    assert not hb.expired()
+
+
+# ---------------------------------------------------------------------------
+# run_with_restarts: explicit restore contract
+# ---------------------------------------------------------------------------
+
+
+def test_restart_reenters_at_restored_step():
+    inj = FailureInjector((3,))
+    calls = []
+
+    def loop(start):
+        calls.append(start)
+        for s in range(start, 6):
+            inj.check(s)
+        return 6
+
+    # restore() says "checkpoint at 2": second attempt enters there
+    assert run_with_restarts(loop, restore=lambda: 2) == 6
+    assert calls == [0, 2]
+
+
+def test_restart_without_restore_reenters_at_initial_step():
+    inj = FailureInjector((3,))
+    calls = []
+
+    def loop(start):
+        calls.append(start)
+        for s in range(start, 6):
+            inj.check(s)
+        return 6
+
+    assert run_with_restarts(loop, initial_step=1) == 6
+    assert calls == [1, 1]
+
+
+def test_restart_budget_exhausted():
+    inj = FailureInjector((0,))
+    seen = []
+
+    def loop(start):
+        inj.fired.clear()             # fail every time
+        inj.check(0)
+        return 1
+
+    with pytest.raises(NodeFailure):
+        run_with_restarts(loop, max_restarts=2,
+                          on_restart=lambda n, e: seen.append(n))
+    assert seen == [1, 2]             # on_restart ran for each retry only

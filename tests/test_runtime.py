@@ -1,4 +1,5 @@
-"""Checkpoint manager, fault runtime, data pipeline, grad compression."""
+"""Checkpoint manager, data pipeline, grad compression.  (The fault
+runtime's unit coverage moved to tests/test_fault.py.)"""
 import os
 import time
 
@@ -8,8 +9,6 @@ import numpy as np
 import pytest
 
 from repro.runtime import compress
-from repro.runtime.fault import (FailureInjector, NodeFailure,
-                                 StragglerMonitor, run_with_restarts)
 from repro.train.checkpoint import CheckpointManager
 from repro.train.data import GANPipeline, Prefetcher, TokenPipeline
 
@@ -54,48 +53,6 @@ def test_checkpoint_restore_with_dtype_cast(tmp_path):
     ckpt.save(1, state)
     restored = ckpt.restore({"w": jnp.zeros((4,), jnp.bfloat16)})
     assert restored["w"].dtype == jnp.bfloat16
-
-
-# ---------------------------------------------------------------------------
-# fault runtime
-# ---------------------------------------------------------------------------
-
-def test_straggler_monitor_flags_slow_step():
-    m = StragglerMonitor(warmup=3, k=3.0)
-    for s in range(10):
-        m.record(s, 0.1 + 0.001 * (s % 2))
-    assert not m.events
-    assert m.record(10, 1.5)          # 15x slower
-    assert m.events
-
-
-def test_failure_injection_and_restart():
-    inj = FailureInjector((3,))
-    calls = []
-
-    def loop(start):
-        s = 0 if start != -1 else 2   # "restore from checkpoint at 2"
-        calls.append(start)
-        while s < 6:
-            inj.check(s)
-            s += 1
-        return s
-
-    final = run_with_restarts(loop)
-    assert final == 6
-    assert calls == [0, -1]           # one failure, one restart
-
-
-def test_restart_budget_exhausted():
-    inj = FailureInjector((0, 1, 2, 3, 4))
-
-    def loop(start):
-        inj.fired.clear()             # fail every time
-        inj.check(0)
-        return 1
-
-    with pytest.raises(NodeFailure):
-        run_with_restarts(loop, max_restarts=2)
 
 
 # ---------------------------------------------------------------------------
