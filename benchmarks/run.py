@@ -7,14 +7,18 @@ fused-vs-per-phase speedup of the single-launch executor),
 rhs-dilation baseline engine + the lax oracle), ``BENCH_serve.json``
 (dynamic image batcher vs the fixed-batch serve loop), and
 ``BENCH_slo.json`` (open-loop Poisson load through the SLO-aware control
-plane: per-class tail latency + goodput-under-SLO) so the perf trajectory
-is tracked run over run.  See ``docs/BENCHMARKS.md`` for what every field
-means.  Run:
+plane: per-class tail latency + goodput-under-SLO), and
+``BENCH_spatial.json`` (plane-parallel shard_map halo-exchange executor vs
+single-device on the 385x385 dilated-context and transposed-decoder
+geometries — run in a forced-8-device child process) so the perf
+trajectory is tracked run over run.  See ``docs/BENCHMARKS.md`` for what
+every field means.  Run:
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
                                            [--dilated-json PATH]
                                            [--serve-json PATH]
                                            [--slo-json PATH]
+                                           [--spatial-json PATH]
 
 ``--quick`` keeps the oracle-checked Fig.-7, dilated, and serving
 wall-clocks (with short timing loops and 10x instead of 100x open-loop
@@ -39,6 +43,9 @@ def main() -> None:
     ap.add_argument("--slo-json", default="BENCH_slo.json",
                     help="where to write the open-loop SLO JSON "
                          "('' disables)")
+    ap.add_argument("--spatial-json", default="BENCH_spatial.json",
+                    help="where to write the plane-parallel JSON "
+                         "('' disables)")
     args = ap.parse_args()
 
     from benchmarks import (dilated_conv, fig7_speedup, fig8_memory,
@@ -56,6 +63,10 @@ def main() -> None:
     serve_bench.main(quick=args.quick, json_path=args.serve_json or None)
     print("# serving — open-loop SLO/tail-latency harness (control plane)")
     serve_bench.slo_main(quick=args.quick, json_path=args.slo_json or None)
+    if args.spatial_json:
+        from benchmarks import spatial_bench
+        print("# plane-parallel — shard_map halo exchange vs single device")
+        spatial_bench.main(quick=args.quick, json_path=args.spatial_json)
     if not args.quick:
         from benchmarks import fig8_training
         print("# paper Fig 8 (right) — GAN training speedup (engine VJPs)")

@@ -152,15 +152,20 @@ def device_fingerprint() -> dict:
 
 
 def spec_key(spec: ConvSpec) -> str:
-    """Deterministic cache key over every plan-relevant spec constant."""
+    """Deterministic cache key over every plan-relevant spec constant.
+    The spatial suffix only appears for device-tiled specs, so every
+    pre-existing cache entry keeps its key."""
     (ph, pw) = spec.padding
-    return (f"{spec.kind}:{spec.in_hw[0]}x{spec.in_hw[1]}"
-            f":c{spec.in_c}->{spec.out_c}"
-            f":k{spec.kernel_hw[0]}x{spec.kernel_hw[1]}"
-            f":s{spec.strides[0]}x{spec.strides[1]}"
-            f":p{ph[0]},{ph[1]},{pw[0]},{pw[1]}"
-            f":d{spec.dilation[0]}x{spec.dilation[1]}"
-            f":{spec.dtype}:{spec.backend}")
+    key = (f"{spec.kind}:{spec.in_hw[0]}x{spec.in_hw[1]}"
+           f":c{spec.in_c}->{spec.out_c}"
+           f":k{spec.kernel_hw[0]}x{spec.kernel_hw[1]}"
+           f":s{spec.strides[0]}x{spec.strides[1]}"
+           f":p{ph[0]},{ph[1]},{pw[0]},{pw[1]}"
+           f":d{spec.dilation[0]}x{spec.dilation[1]}"
+           f":{spec.dtype}:{spec.backend}")
+    if spec.spatial != (1, 1):
+        key += f":sp{spec.spatial[0]}x{spec.spatial[1]}"
+    return key
 
 
 def spec_to_json(spec: ConvSpec) -> dict:
@@ -172,6 +177,7 @@ def spec_to_json(spec: ConvSpec) -> dict:
         "strides": list(spec.strides),
         "padding": [list(p) for p in spec.padding],
         "dilation": list(spec.dilation),
+        "spatial": list(spec.spatial),
     }
 
 
@@ -183,6 +189,7 @@ def route_to_json(route: Route) -> dict:
         "path": route.path,
         "tiles": list(route.tiles) if route.tiles else None,
         "sp_tiles": list(route.sp_tiles) if route.sp_tiles else None,
+        "dev_tiles": list(route.dev_tiles) if route.dev_tiles else None,
         "fused_bwd": route.fused_bwd,
     }
 
@@ -192,7 +199,8 @@ def route_from_json(d: dict) -> Route:
         batch=int(d["batch"]), path=str(d["path"]),
         tiles=tuple(d["tiles"]) if d.get("tiles") else None,
         fused_bwd=bool(d.get("fused_bwd", True)),
-        sp_tiles=tuple(d["sp_tiles"]) if d.get("sp_tiles") else None)
+        sp_tiles=tuple(d["sp_tiles"]) if d.get("sp_tiles") else None,
+        dev_tiles=tuple(d["dev_tiles"]) if d.get("dev_tiles") else None)
 
 
 def cache_path(path: Optional[str] = None) -> Optional[str]:
@@ -364,11 +372,29 @@ class AutotunePolicy:
 def _dedupe(routes: Sequence[Route]) -> tuple[Route, ...]:
     seen, out = set(), []
     for r in routes:
-        k = (r.path, r.tiles, r.sp_tiles)
+        k = (r.path, r.tiles, r.sp_tiles, r.dev_tiles)
         if k not in seen:
             seen.add(k)
             out.append(r)
     return tuple(out)
+
+
+def _with_dev_candidates(plan: ConvPlan, batch: int,
+                         cands: Sequence[Route]) -> tuple[Route, ...]:
+    """Device-tiled candidates for a spatial spec: each single-device
+    candidate paired with its plane-parallel twin (same per-shard path,
+    ``dev_tiles`` attached), so ``measure_bucket`` ranks sharded vs
+    single-device execution on the live mesh like any other route flip."""
+    if plan.spec.spatial == (1, 1):
+        return _dedupe(cands)
+    from repro.core import spatial as spatialmod
+    if spatialmod.spatial_plan(plan.spec) is None:
+        return _dedupe(cands)
+    both = []
+    for r in cands:
+        both.append(dataclasses.replace(r, dev_tiles=None))
+        both.append(dataclasses.replace(r, dev_tiles=plan.spec.spatial))
+    return _dedupe(both)
 
 
 def candidate_routes(plan: ConvPlan, batch: int) -> tuple[Route, ...]:
@@ -410,7 +436,7 @@ def candidate_routes(plan: ConvPlan, batch: int) -> tuple[Route, ...]:
             cands.append(Route(batch, "fused_tap", None))
         cands.append(Route(batch, "taps", None))
         cands.append(Route(batch, "per_phase", None))
-        return _dedupe(cands)
+        return _with_dev_candidates(plan, batch, cands)
 
     # 'conv' / 'dilated': the single-correlation feasible set
     (ph, pw) = spec.padding
@@ -433,14 +459,25 @@ def candidate_routes(plan: ConvPlan, batch: int) -> tuple[Route, ...]:
     if fused_ok:
         cands.append(Route(batch, "fused_tap", None, fused_bwd=True))
     cands.append(Route(batch, "taps", None, fused_bwd=fused_ok))
-    return _dedupe(cands)
+    return _with_dev_candidates(plan, batch, cands)
 
 
 def _measurable(route: Route) -> bool:
     """Pallas wall-clock is only meaningful on a real TPU backend; interpret
-    mode (CPU hosts) would time the Python interpreter, not the kernel."""
+    mode (CPU hosts) would time the Python interpreter, not the kernel.
+    Device-tiled routes need the matching spatial mesh bound — without it
+    the forced plan would silently measure the single-device fallback."""
     if route.path == "pallas":
-        return jax.default_backend() == "tpu"
+        if jax.default_backend() != "tpu":
+            return False
+    if route.dev_tiles is not None:
+        from repro.core import spatial as spatialmod
+        active = spatialmod.active_spatial_mesh()
+        if active is None:
+            return False
+        mesh, axes = active
+        if not spatialmod.mesh_matches(mesh, axes, route.dev_tiles):
+            return False
     return True
 
 
@@ -450,6 +487,8 @@ def route_label(route: Route) -> str:
         lab += f"@{route.tiles[0]}x{route.tiles[1]}"
     if route.sp_tiles:
         lab += f"@sp{route.sp_tiles[0]}x{route.sp_tiles[1]}"
+    if route.dev_tiles:
+        lab += f"@dev{route.dev_tiles[0]}x{route.dev_tiles[1]}"
     return lab
 
 

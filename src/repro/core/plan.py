@@ -135,6 +135,12 @@ _PLANE_RATIO_MAX = 1.6
 # im2col-like blowup stops being an edge-memory win.
 _PLANE_BYTES_MAX = 64 * 1024 * 1024
 
+# plane-parallel verdict floor: a spec that *requests* device tiling
+# (``ConvSpec.spatial != (1, 1)``) still routes single-device at buckets
+# whose resident input+output planes stay under this — splitting a small
+# plane buys halo traffic without relieving any memory pressure.
+_SPATIAL_MIN_BYTES = 4 * 1024 * 1024
+
 
 def norm_padding(padding, k_hw) -> tuple[Pair, Pair]:
     """Normalize 'SAME'/'VALID'/int-pair/nested paddings to ((lo,hi),(lo,hi))."""
@@ -259,11 +265,16 @@ class ConvSpec:
     dilation: Pair = (1, 1)
     dtype: str = "float32"
     backend: str = "auto"         # 'auto' | 'xla' | 'pallas'
+    # requested device tiling (D_h, D_w) of the plane over a spatial mesh
+    # (``core.spatial``).  Part of the cache key: a tiled site plans its
+    # own routes (``Route.dev_tiles``).  (1, 1) = single-device, always.
+    spatial: Pair = (1, 1)
 
 
 def conv_spec(kind: str, x_shape: Sequence[int], kernel_shape: Sequence[int],
               *, strides=(1, 1), padding=((0, 0), (0, 0)), dilation=(1, 1),
-              dtype=None, backend: str = "auto") -> ConvSpec:
+              dtype=None, backend: str = "auto",
+              spatial: Pair = (1, 1)) -> ConvSpec:
     """Build a normalized (cache-canonical) spec from array shapes."""
     r, s, c, n = kernel_shape
     if x_shape[-1] != c:
@@ -275,7 +286,7 @@ def conv_spec(kind: str, x_shape: Sequence[int], kernel_shape: Sequence[int],
         padding=norm_padding(padding, (r, s)),
         dilation=tuple(int(v) for v in dilation),
         dtype=str(jnp.dtype(dtype)) if dtype is not None else "float32",
-        backend=backend)
+        backend=backend, spatial=tuple(int(v) for v in spatial))
 
 
 # ---------------------------------------------------------------------------
@@ -336,7 +347,15 @@ class Route:
     the *tiled* kernel — ``(T_oh, T_ow)`` output pixels for the single-
     correlation kinds, ``(T_u, T_v)`` phase-output pixels for the transposed
     kind (the interleaved tile is ``(T_u·s_h, T_v·s_w)``).  ``None`` means
-    whole-plane VMEM residency (the small-plane fast path)."""
+    whole-plane VMEM residency (the small-plane fast path).
+
+    ``dev_tiles`` is the *device*-tiling verdict, sitting one level above
+    ``sp_tiles``: ``(D_h, D_w)`` devices the plane shards over when the spec
+    requests spatial tiling, the geometry admits one-hop halo exchange, and
+    this bucket's working set clears ``_SPATIAL_MIN_BYTES``
+    (``core.spatial``).  ``path``/``tiles`` remain the *single-device*
+    verdict — each shard (and any mesh-less fallback) executes through
+    them unchanged."""
 
     batch: int
     # 'pallas'|'fused_plane'|'fused_tap'|'taps', plus (transposed,
@@ -347,10 +366,37 @@ class Route:
     tiles: Pair | None            # (C_t, N_t) when path == 'pallas'
     fused_bwd: bool = True
     sp_tiles: Pair | None = None  # spatial tile when 'pallas' is tiled
+    dev_tiles: Pair | None = None  # (D_h, D_w) plane-parallel verdict
+
+
+def _dev_verdict(spec: ConvSpec, out_hw: Pair, itemsize: int,
+                 batch: int) -> Pair | None:
+    """The per-bucket device-tiling verdict: the spec must request tiling,
+    the geometry must admit one-hop halo exchange (``spatial.spatial_plan``
+    — pure arithmetic, identical on every host), and the bucket's resident
+    planes must outgrow the single-device floor."""
+    if spec.spatial == (1, 1):
+        return None
+    from repro.core import spatial
+    sp = spatial.spatial_plan(spec)
+    if sp is None:
+        return None
+    if spatial.plane_parallel_bytes(spec, out_hw, batch,
+                                    itemsize) <= _SPATIAL_MIN_BYTES:
+        return None
+    return spec.spatial
 
 
 def _single_route(spec: ConvSpec, hp: int, wp: int, out_hw: Pair,
                   itemsize: int, batch: int) -> Route:
+    """Single-correlation bucket route + the device-tiling verdict."""
+    route = _single_route_1dev(spec, hp, wp, out_hw, itemsize, batch)
+    dev = _dev_verdict(spec, out_hw, itemsize, batch)
+    return dataclasses.replace(route, dev_tiles=dev) if dev else route
+
+
+def _single_route_1dev(spec: ConvSpec, hp: int, wp: int, out_hw: Pair,
+                       itemsize: int, batch: int) -> Route:
     """Whole-conv route for the single-correlation kinds ('conv'/'dilated')
     at one batch bucket: one Pallas launch / one wide GEMM / per-tap
     fallback.
@@ -396,6 +442,17 @@ def _transposed_route(spec: ConvSpec, hg: int, wg: int, out_hw: Pair,
                       total_taps: int, sum_uv: int, sum_uvt: int,
                       uniform: bool, phases, itemsize: int,
                       batch: int) -> Route:
+    """Transposed bucket route + the device-tiling verdict."""
+    route = _transposed_route_1dev(spec, hg, wg, out_hw, total_taps, sum_uv,
+                                   sum_uvt, uniform, phases, itemsize, batch)
+    dev = _dev_verdict(spec, out_hw, itemsize, batch)
+    return dataclasses.replace(route, dev_tiles=dev) if dev else route
+
+
+def _transposed_route_1dev(spec: ConvSpec, hg: int, wg: int, out_hw: Pair,
+                           total_taps: int, sum_uv: int, sum_uvt: int,
+                           uniform: bool, phases, itemsize: int,
+                           batch: int) -> Route:
     """Whole-conv route for the transposed kind at one batch bucket: one
     launch / one wide GEMM, the plane-GEMM intermediate capped at the
     bucket's size."""
@@ -590,6 +647,16 @@ class ConvPlan:
                 f"input {x.shape[-3:]} does not match plan spec "
                 f"{self.spec.in_hw + (self.spec.in_c,)} — plans bake geometry "
                 f"at build time; plan_conv a spec for this shape")
+        if self.spec.spatial != (1, 1):
+            # plane-parallel dispatch sits *above* the custom VJP: jax
+            # differentiates through the shard_map (the shard-local plan's
+            # own VJP runs per device), so the backward is plane-parallel
+            # too.  Returns None without a matching bound mesh — the
+            # route's single-device path/tiles fields take over below.
+            from repro.core import spatial
+            y = spatial.try_spatial(self, x, packed)
+            if y is not None:
+                return y
         if self.spec.kind == "transposed":
             return _planned_transposed(self, x, self.as_superpack(packed))
         return _planned_single(self, x, self.as_superpack(packed))
@@ -731,6 +798,9 @@ def plan_cache_clear():
     autotune = sys.modules.get("repro.core.autotune")
     if autotune is not None:
         autotune.reset()
+    spatial = sys.modules.get("repro.core.spatial")
+    if spatial is not None:
+        spatial.reset()
 
 
 # ---------------------------------------------------------------------------

@@ -10,8 +10,16 @@ Usage:
     python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh single
     python -m repro.launch.dryrun --all [--mesh both] [--force]
 
+Plane-parallel topology planning (``core.spatial``): lower + compile one
+conv site's device-tiled executor across candidate ``dev_tiles`` meshes and
+record per-shard memory, the halo geometry, and the collective schedule —
+the offline answer to "how many ways should this plane split on this pod":
+
+    python -m repro.launch.dryrun --convplane dilated_context_385
+    python -m repro.launch.dryrun --convplane decoder_96 --dev-tiles 2x2,4x1
+
 Results append incrementally to results/dryrun/<arch>__<shape>__<mesh>.json
-so a long sweep is restartable.
+(resp. convplane__<site>__<DhxDw>.json) so a long sweep is restartable.
 """
 import argparse       # noqa: E402
 import json           # noqa: E402
@@ -156,6 +164,126 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, *,
     return rec, compiled
 
 
+# -- plane-parallel conv topology planning ----------------------------------
+
+# named conv sites the topology planner sweeps: the BENCH_spatial
+# geometries plus a big SegNet-style encoder plane.  (kind, in_hw, c, n,
+# kernel, strides, padding, dilation, batch)
+CONVPLANE_SITES = {
+    "dilated_context_385": dict(kind="dilated", in_hw=(385, 385), c=32, n=32,
+                                kernel=(3, 3), strides=(1, 1),
+                                padding=((2, 2), (2, 2)), dilation=(2, 2),
+                                batch=4),
+    # padding is the zoo's deconv_padding(4, 2) = (1, 3): out = 2·in
+    "decoder_96": dict(kind="transposed", in_hw=(96, 96), c=64, n=32,
+                       kernel=(4, 4), strides=(2, 2),
+                       padding=((1, 3), (1, 3)), dilation=(1, 1), batch=4),
+    "encoder_512": dict(kind="conv", in_hw=(512, 512), c=16, n=32,
+                        kernel=(3, 3), strides=(1, 1),
+                        padding=((1, 1), (1, 1)), dilation=(1, 1), batch=4),
+}
+
+DEFAULT_DEV_TILES = ((2, 1), (4, 1), (2, 2), (8, 1), (4, 2))
+
+
+def convplane_spec(site: str, dev_tiles):
+    from repro.core.plan import ConvSpec
+    g = CONVPLANE_SITES[site]
+    return ConvSpec(kind=g["kind"], in_hw=g["in_hw"], in_c=g["c"],
+                    out_c=g["n"], kernel_hw=g["kernel"],
+                    strides=g["strides"], padding=g["padding"],
+                    dilation=g["dilation"], backend="xla",
+                    spatial=tuple(dev_tiles))
+
+
+def lower_convplane(site: str, dev_tiles):
+    """Lower + compile one conv site's plane-parallel executor on a
+    ``make_spatial_mesh(D_h, D_w)`` of placeholder host devices; returns the
+    per-shard memory / halo-geometry / collective record."""
+    from repro.core import spatial
+    from repro.core.plan import plan_conv
+    from repro.launch.mesh import make_spatial_mesh
+
+    spec = convplane_spec(site, dev_tiles)
+    sp = spatial.spatial_plan(spec)
+    if sp is None:
+        return {"site": site, "dev_tiles": list(dev_tiles),
+                "skipped": "geometry does not admit one-hop halo exchange"}
+    plan = plan_conv(spec)
+    b = CONVPLANE_SITES[site]["batch"]
+    h, w = spec.in_hw
+    x = jax.ShapeDtypeStruct((b, h, w, spec.in_c), jnp.float32)
+    pk = jax.ShapeDtypeStruct(
+        (plan.total_taps * spec.in_c, spec.out_c), jnp.float32)
+    mesh = make_spatial_mesh(*dev_tiles)
+
+    t0 = time.time()
+    with spatial.use_spatial_mesh(mesh):
+        lowered = jax.jit(lambda a, k: plan.apply(a, k)).lower(x, pk)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    hc = hlo_analysis.analyze(compiled.as_text(), default_group=mesh.size)
+    th, tw = sp.dims
+    return {
+        "site": site, "spec": dataclasses_asdict_spec(spec),
+        "dev_tiles": list(dev_tiles), "devices": mesh.size,
+        "route": plan.route_for_batch(b).path,
+        "halo": {
+            "h": {"block": th.block, "tin": th.tin, "halo_lo": th.halo_lo,
+                  "halo_hi": th.halo_hi, "pad_to": th.pad_to},
+            "w": {"block": tw.block, "tin": tw.tin, "halo_lo": tw.halo_lo,
+                  "halo_hi": tw.halo_hi, "pad_to": tw.pad_to},
+        },
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": _mem_dict(mem),
+        "bytes_per_chip": (mem.argument_size_in_bytes
+                           + mem.temp_size_in_bytes
+                           + mem.output_size_in_bytes
+                           - mem.alias_size_in_bytes),
+        "collectives": {"per_kind": hc["coll_per_kind"],
+                        "total": hc["coll_total"],
+                        "num_ops": hc["num_collectives"]},
+    }
+
+
+def dataclasses_asdict_spec(spec) -> dict:
+    import dataclasses as _dc
+    return {k: list(v) if isinstance(v, tuple) else v
+            for k, v in _dc.asdict(spec).items()}
+
+
+def run_convplane(site: str, dev_tiles, force=False):
+    dh, dw = dev_tiles
+    out = os.path.join(RESULTS_DIR, f"convplane__{site}__{dh}x{dw}.json")
+    if os.path.exists(out) and not force:
+        print(f"[skip-cached] {out}")
+        return json.load(open(out))
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    print(f"[convplane] {site} x {dh}x{dw} ...", flush=True)
+    try:
+        rec = lower_convplane(site, dev_tiles)
+    except Exception as e:
+        rec = {"site": site, "dev_tiles": list(dev_tiles),
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+        with open(out + ".err", "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[FAIL] {site} {dh}x{dw}: {e}", flush=True)
+        return rec
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    if "skipped" in rec:
+        print(f"[skip] {site} {dh}x{dw}: {rec['skipped']}", flush=True)
+    else:
+        print(f"[ok] lower {rec['lower_s']}s compile {rec['compile_s']}s | "
+              f"{rec['bytes_per_chip'] / 2**20:.1f} MiB/chip, "
+              f"collectives {rec['collectives']['num_ops']}", flush=True)
+    return rec
+
+
 def cell_path(arch, shape_name, multi_pod, tag=""):
     mesh = "multi" if multi_pod else "single"
     sfx = f"__{tag}" if tag else ""
@@ -210,7 +338,23 @@ def main():
                     default="auto")
     ap.add_argument("--tag", default="", help="suffix for the result file "
                     "(hillclimb variants keep the baseline intact)")
+    ap.add_argument("--convplane", choices=tuple(CONVPLANE_SITES),
+                    help="plane-parallel topology sweep for one conv site "
+                    "(skips the transformer grid)")
+    ap.add_argument("--dev-tiles", default="",
+                    help="comma-separated DhxDw list for --convplane "
+                    "(default: the standard candidate set)")
     args = ap.parse_args()
+
+    if args.convplane:
+        if args.dev_tiles:
+            tiles = tuple(tuple(int(v) for v in t.split("x"))
+                          for t in args.dev_tiles.split(","))
+        else:
+            tiles = DEFAULT_DEV_TILES
+        for dt in tiles:
+            run_convplane(args.convplane, dt, force=args.force)
+        return
 
     archs = registry.ARCH_IDS if (args.all or not args.arch) else (args.arch,)
     shapes = tuple(SHAPES) if (args.all or not args.shape) else (args.shape,)

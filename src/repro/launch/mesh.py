@@ -33,3 +33,15 @@ def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
     if pod:
         return _mesh((pod, data, model), ("pod", "data", "model"))
     return _mesh((data, model), ("data", "model"))
+
+
+def make_spatial_mesh(sp_h: int, sp_w: int = 1, data: int = 1):
+    """Mesh for plane-parallel conv execution (``core.spatial``): 'sp_h' /
+    'sp_w' carry one conv plane's rows/cols (the ``DEFAULT_RULES``
+    'plane_h'/'plane_w' targets).  The leading 'data' axis (extent 1 by
+    default) keeps batch parallelism alive and lets the serving layer's
+    ``image_spec`` constraints resolve on this mesh unchanged.  Axis order
+    is (data, sp_h, sp_w) so neighbouring spatial shards land on
+    neighbouring devices — the halo ``ppermute`` is a nearest-neighbour
+    hop on ring interconnects."""
+    return _mesh((data, sp_h, sp_w), ("data", "sp_h", "sp_w"))

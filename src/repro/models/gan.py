@@ -79,6 +79,11 @@ class GANConfig:
     # measured-route policy (None = heuristic routes); model load pays any
     # cache-miss microbenchmarks once, apply only ever sees tuned plans
     autotune: Optional[AutotunePolicy] = None
+    # plane-parallel policy: (D_h, D_w) device tiling requested for every
+    # conv site (``ConvSpec.spatial``).  Plans keep single-device routes as
+    # the fallback, so (2, 1) on a mesh-less host is still correct — set
+    # from ``DistContext.spatial_tiles()`` when serving over a spatial mesh
+    spatial: tuple[int, int] = (1, 1)
 
 
 DCGAN = GANConfig("dcgan", DCGAN_LAYERS)
@@ -99,7 +104,8 @@ def generator_plans(cfg: GANConfig, dtype=jnp.float32) -> tuple[ConvPlan, ...]:
             out_c=l.out_c, kernel_hw=(l.kernel, l.kernel),
             strides=(l.stride, l.stride),
             padding=deconv_padding(l.kernel, l.stride),
-            dtype=str(jnp.dtype(dtype)), backend=cfg.backend),
+            dtype=str(jnp.dtype(dtype)), backend=cfg.backend,
+            spatial=cfg.spatial),
             autotune=cfg.autotune))
     return tuple(plans)
 
@@ -115,7 +121,8 @@ def discriminator_plans(cfg: GANConfig,
             in_c=l.out_c, out_c=l.in_c, kernel_hw=(k, k),
             strides=(l.stride, l.stride),
             padding=((k // 2, (k - 1) // 2), (k // 2, (k - 1) // 2)),
-            dtype=str(jnp.dtype(dtype)), backend=cfg.backend),
+            dtype=str(jnp.dtype(dtype)), backend=cfg.backend,
+            spatial=cfg.spatial),
             autotune=cfg.autotune))
     return tuple(plans)
 

@@ -76,6 +76,9 @@ class SegNetConfig:
     backend: str = "xla"            # plan policy: 'xla' | 'pallas' | 'auto'
     # measured-route policy (None = heuristic routes)
     autotune: Optional[AutotunePolicy] = None
+    # plane-parallel policy: (D_h, D_w) requested device tiling per site
+    # (see ``GANConfig.spatial``); single-device fallback is always kept
+    spatial: tuple[int, int] = (1, 1)
 
     @property
     def layers(self) -> tuple[SegLayer, ...]:
@@ -109,7 +112,8 @@ def segnet_plans(cfg: SegNetConfig, dtype=jnp.float32) -> tuple[ConvPlan, ...]:
             strides=(l.stride, l.stride),
             padding=atrous_padding(l.kernel, l.dilation),
             dilation=(l.dilation, l.dilation),
-            dtype=str(jnp.dtype(dtype)), backend=cfg.backend),
+            dtype=str(jnp.dtype(dtype)), backend=cfg.backend,
+            spatial=cfg.spatial),
             autotune=cfg.autotune))
     return tuple(plans)
 

@@ -47,6 +47,9 @@ class VAEConfig:
     backend: str = "xla"            # plan policy: 'xla' | 'pallas' | 'auto'
     # measured-route policy (None = heuristic routes)
     autotune: Optional[AutotunePolicy] = None
+    # plane-parallel policy: (D_h, D_w) requested device tiling per site
+    # (see ``GANConfig.spatial``); single-device fallback is always kept
+    spatial: tuple[int, int] = (1, 1)
 
     @property
     def feat_hw(self) -> int:
@@ -94,7 +97,8 @@ def encoder_plans(cfg: VAEConfig, dtype=jnp.float32) -> tuple[ConvPlan, ...]:
             kind="conv", in_hw=(l.in_hw, l.in_hw), in_c=l.in_c,
             out_c=l.out_c, kernel_hw=(k, k), strides=(l.stride, l.stride),
             padding=((k // 2, (k - 1) // 2), (k // 2, (k - 1) // 2)),
-            dtype=str(jnp.dtype(dtype)), backend=cfg.backend),
+            dtype=str(jnp.dtype(dtype)), backend=cfg.backend,
+            spatial=cfg.spatial),
             autotune=cfg.autotune))
     return tuple(plans)
 
@@ -107,7 +111,8 @@ def decoder_plans(cfg: VAEConfig, dtype=jnp.float32) -> tuple[ConvPlan, ...]:
             out_c=l.out_c, kernel_hw=(l.kernel, l.kernel),
             strides=(l.stride, l.stride),
             padding=deconv_padding(l.kernel, l.stride),
-            dtype=str(jnp.dtype(dtype)), backend=cfg.backend),
+            dtype=str(jnp.dtype(dtype)), backend=cfg.backend,
+            spatial=cfg.spatial),
             autotune=cfg.autotune))
     return tuple(plans)
 

@@ -42,7 +42,9 @@ admission → schedule → launch → replay
   responses bit-equal to a fault-free run — asserted in
   ``tests/test_control_plane.py``.  When the failure means a lost replica,
   ``degrade`` shrinks the mesh via ``runtime.elastic.shrink_mesh`` and
-  re-jits every image backend under the surviving data-parallel extent.
+  re-jits every image backend under the surviving data-parallel extent;
+  with ``spatial_tiles=`` it instead re-tiles the survivors as a spatial
+  mesh and re-plans plane-parallel ``dev_tiles`` (``core.spatial``).
 
 Multi-model hosting: ``register_image_model`` / ``register_lm_model`` put
 a GAN, a segnet, and a VAE (or anything with a ``serve_fn``) behind one
@@ -487,17 +489,41 @@ class ControlPlane:
             self.on_fault(self, err)
 
     def degrade(self, devices_left: int, *, model_parallel: int = 1,
-                pod: int = 0, serve_fns: Optional[dict] = None):
-        """Degraded data-parallel serving after replica loss: shrink the
-        mesh to the surviving chips (``runtime.elastic.shrink_mesh`` — TP
-        preserved, whole DP replicas dropped) and re-jit every image
-        backend under the new extent.  ``serve_fns`` optionally maps model
-        name -> a rebuilt closure over re-placed params (the
-        ``elastic.restore_on_mesh`` path); without it the existing
-        closures re-jit under the shrunk mesh."""
-        from repro.runtime.elastic import shrink_mesh
+                pod: int = 0, serve_fns: Optional[dict] = None,
+                spatial_tiles: Optional[tuple] = None):
+        """Degraded serving after replica loss: shrink the mesh to the
+        surviving chips and re-jit every image backend under the new
+        extent.  ``serve_fns`` optionally maps model name -> a rebuilt
+        closure over re-placed params (the ``elastic.restore_on_mesh``
+        path); without it the existing closures re-jit under the shrunk
+        mesh.
+
+        Data-parallel (default): ``runtime.elastic.shrink_mesh`` — TP
+        preserved, whole DP replicas dropped.
+
+        Plane-parallel (``spatial_tiles=(D_h, D_w)``): the survivors are
+        re-tiled as a spatial mesh (``launch.mesh.make_spatial_mesh``,
+        leftover extent on the leading 'data' axis) and installed as the
+        active spatial mesh, so plans re-built against the new tiling emit
+        matching ``dev_tiles`` verdicts.  ``serve_fns`` should close over
+        model configs whose ``spatial=`` matches ``spatial_tiles`` — that
+        is the re-plan: the new closures trace through the shard_map
+        executor on the shrunk mesh."""
         from repro.sharding import DistContext
-        mesh = shrink_mesh(devices_left, model_parallel, pod)
+        if spatial_tiles is not None:
+            from repro.core import spatial as spatialmod
+            from repro.launch.mesh import make_spatial_mesh
+            sp_h, sp_w = (int(v) for v in spatial_tiles)
+            if devices_left % (sp_h * sp_w):
+                raise ValueError(
+                    f"degrade: spatial_tiles {sp_h}x{sp_w} does not divide "
+                    f"{devices_left} surviving devices")
+            mesh = make_spatial_mesh(
+                sp_h, sp_w, data=devices_left // (sp_h * sp_w))
+            spatialmod.set_spatial_mesh(mesh)
+        else:
+            from repro.runtime.elastic import shrink_mesh
+            mesh = shrink_mesh(devices_left, model_parallel, pod)
         dist = DistContext(mesh=mesh)
         for name, be in self.backends.items():
             if isinstance(be, ImageBackend):
@@ -505,6 +531,8 @@ class ControlPlane:
         self.degraded = {"devices_left": devices_left,
                          "mesh_shape": dict(mesh.shape),
                          "at_launch": self.launch_seq}
+        if spatial_tiles is not None:
+            self.degraded["spatial_tiles"] = (sp_h, sp_w)
         return mesh
 
     def _observe(self, model: str, bucket, dt: float):

@@ -125,6 +125,19 @@ class DynamicImageBatcher:
                 x = dist.constrain(x, dist.image_spec())
             return fn(x)
 
+        if dist is not None and dist.spatial_tiles() != (1, 1):
+            # plane-parallel serving: bind the mesh as the active spatial
+            # mesh while tracing, so conv plans whose routes carry matching
+            # ``dev_tiles`` dispatch through the shard_map executor.  The
+            # binding only matters at trace time — compiled bucket
+            # executables keep the sharded program afterwards.
+            from repro.core import spatial as _spatial
+            inner = batched
+
+            def batched(x, _inner=inner):
+                with _spatial.use_spatial_mesh(dist.mesh):
+                    return _inner(x)
+
         self._serve = jax.jit(batched)
 
     # -- client API ----------------------------------------------------------

@@ -8,6 +8,7 @@ logical axes to physical mesh axes — changing a parallelism strategy (the
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -30,10 +31,40 @@ DEFAULT_RULES: dict[str, Any] = {
     # flip "conv_taps" to 'model' for row-parallel superpacks instead.
     "conv_taps": None,
     "conv_out": "model",
+    # plane-parallel execution (core.spatial): one conv plane's spatial
+    # dims sharded over the mesh, halo exchange at tile boundaries.  The
+    # logical axes name the *image* rows/cols; ``make_spatial_mesh``
+    # provides the physical 'sp_h'/'sp_w' axes.
+    "plane_h": "sp_h",
+    "plane_w": "sp_w",
 }
 
 # logical spec of every superpacked conv weight buffer
 SUPERPACK_SPEC = P("conv_taps", "conv_out")
+
+# logical spec of a plane-parallel (B, H, W, C) activation
+PLANE_SPEC = P("batch", "plane_h", "plane_w")
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs, check=False):
+    """``shard_map`` across the jax versions this repo supports: new
+    releases expose ``jax.shard_map`` with ``check_vma``; 0.4.x has
+    ``jax.experimental.shard_map.shard_map`` with ``check_rep``.  The
+    replication check defaults off — the plane-parallel bodies return
+    device-varying tiles and psum weight cotangents through the
+    ``shard_map`` transpose, which the 0.4.x checker cannot type."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)
+
+
+# (param-path, axis) pairs already warned about by ``shard_params`` — the
+# best-effort replication fallback is silent-by-design per call site, but
+# the *first* hit for a given param deserves a visible trace.
+_REPLICATION_WARNED: set = set()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +112,29 @@ class DistContext:
         batch dim, spatial/channel replicated (trailing dims implicit)."""
         return P(self.rules["batch"])
 
+    def plane_spec(self) -> P:
+        """(B, H, W, C) plane-parallel spec: batch over DP axes, the plane's
+        rows/cols over the spatial mesh axes (``core.spatial`` executor)."""
+        return self.resolve(PLANE_SPEC)
+
+    def spatial_tiles(self) -> tuple[int, int]:
+        """(D_h, D_w) device-tiling extents this mesh offers a conv plane:
+        the sizes of the mesh axes the 'plane_h'/'plane_w' logical axes
+        resolve to (1 when unmapped or absent from the mesh) — what model
+        configs feed into ``ConvSpec.spatial``."""
+        if self.mesh is None:
+            return (1, 1)
+        out = []
+        for logical in ("plane_h", "plane_w"):
+            ax = self.rules.get(logical)
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                if a is not None and a in self.mesh.shape:
+                    n *= int(self.mesh.shape[a])
+            out.append(n)
+        return tuple(out)
+
     def shard_params(self, params, specs):
         """Place a param tree onto the mesh per its logical spec tree — the
         DistContext-aware half of every planned model's ``*_init``.  A dim
@@ -91,11 +145,11 @@ class DistContext:
         if self.mesh is None:
             return params
 
-        def put(p, sp):
+        def put(path, p, sp):
             resolved = tuple(self.resolve(sp))
             resolved += (None,) * (len(p.shape) - len(resolved))
             out = []
-            for dim, ax in zip(p.shape, resolved):
+            for i, (dim, ax) in enumerate(zip(p.shape, resolved)):
                 if ax is None:
                     out.append(None)
                     continue
@@ -103,10 +157,21 @@ class DistContext:
                 n = 1
                 for a in axes:
                     n *= int(self.mesh.shape[a])
-                out.append(ax if dim % n == 0 else None)
+                if dim % n:
+                    name = jax.tree_util.keystr(path)
+                    if (name, i, ax) not in _REPLICATION_WARNED:
+                        _REPLICATION_WARNED.add((name, i, ax))
+                        warnings.warn(
+                            f"shard_params: param {name} dim {i} (size "
+                            f"{dim}) does not divide mesh axis {ax!r} "
+                            f"(extent {n}) — replicating that dim instead",
+                            RuntimeWarning, stacklevel=2)
+                    out.append(None)
+                    continue
+                out.append(ax)
             return jax.device_put(p, NamedSharding(self.mesh, P(*out)))
 
-        return jax.tree.map(put, params, specs)
+        return jax.tree_util.tree_map_with_path(put, params, specs)
 
     def constrain(self, x, spec: Optional[P] = None):
         if self.mesh is None:

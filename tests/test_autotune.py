@@ -125,8 +125,11 @@ def test_cache_roundtrip_identical_routes(tmp_path):
 def test_route_json_schema_matches_fixture():
     r = Route(4, "pallas", (8, 8), sp_tiles=(4, 4), fused_bwd=False)
     rj = route_to_json(r)
-    assert set(rj) == {"batch", "path", "tiles", "sp_tiles", "fused_bwd"}
+    assert set(rj) == {"batch", "path", "tiles", "sp_tiles", "fused_bwd",
+                       "dev_tiles"}
     assert route_from_json(rj) == r
+    dev = Route(16, "pallas", (8, 8), sp_tiles=(4, 4), dev_tiles=(2, 2))
+    assert route_from_json(route_to_json(dev)) == dev
 
 
 @pytest.mark.parametrize("poison", ["corrupt", "truncated", "stale_schema",

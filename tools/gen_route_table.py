@@ -11,9 +11,11 @@ policy change, regenerate and commit the diff::
 
 Covered sites: the fig7 suite (Table-1 DCGAN + cGAN generators, the VAE
 decoder), the VAE encoder, every SegNet layer (strided front-end, atrous
-context, 1x1 head), and the BENCH_dilated layer suite — each planned under
-both explicit backends ('xla' and 'pallas'; 'auto' is excluded because its
-verdict depends on the host's jax.default_backend()).
+context, 1x1 head), the BENCH_dilated layer suite, and the plane-parallel
+convplane sites (``launch.dryrun.CONVPLANE_SITES``) under explicit device
+tilings — pinning their per-bucket ``dev_tiles`` verdicts — each planned
+under both explicit backends ('xla' and 'pallas'; 'auto' is excluded
+because its verdict depends on the host's jax.default_backend()).
 
 The committed fixture snapshots **heuristic** routes ONLY: those are pure
 plan-time arithmetic over the spec constants, so *that* table is identical
@@ -86,6 +88,17 @@ def route_specs():
             kind="dilated", in_hw=(h, h), in_c=c, out_c=n,
             kernel_hw=(k, k), padding=atrous_padding(k, d),
             dilation=(d, d))))
+
+    # plane-parallel requests: the dryrun convplane sites under their device
+    # tilings — pins every ``dev_tiles`` verdict per site/bucket (like every
+    # other column, pure plan-time arithmetic, identical on all hosts)
+    from repro.launch.dryrun import convplane_spec
+    for site, tiles in (("dilated_context_385", (4, 1)),
+                        ("dilated_context_385", (2, 2)),
+                        ("decoder_96", (2, 2)),
+                        ("encoder_512", (4, 1))):
+        specs.append((f"convplane_{site}_{tiles[0]}x{tiles[1]}",
+                      convplane_spec(site, tiles)))
     return specs
 
 
@@ -168,8 +181,11 @@ def main(argv=None):
                    if r["path"] == "pallas")
     n_tiled = sum(1 for e in table["entries"] for r in e["routes"]
                   if r["sp_tiles"])
+    n_dev = sum(1 for e in table["entries"] for r in e["routes"]
+                if r.get("dev_tiles"))
     print(f"wrote {FIXTURE} ({len(table['entries'])} entries, "
-          f"{n_pallas} pallas routes of which {n_tiled} tiled)")
+          f"{n_pallas} pallas routes of which {n_tiled} tiled, "
+          f"{n_dev} device-tiled)")
 
 
 if __name__ == "__main__":
