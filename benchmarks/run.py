@@ -10,15 +10,18 @@ rhs-dilation baseline engine + the lax oracle), ``BENCH_serve.json``
 plane: per-class tail latency + goodput-under-SLO), and
 ``BENCH_spatial.json`` (plane-parallel shard_map halo-exchange executor vs
 single-device on the 385x385 dilated-context and transposed-decoder
-geometries — run in a forced-8-device child process) so the perf
-trajectory is tracked run over run.  See ``docs/BENCHMARKS.md`` for what
-every field means.  Run:
+geometries — run in a forced-8-device child process), and
+``BENCH_quant.json`` (int8 quantized superpacks vs their f32 twins: weight
+bytes, per-bucket route verdicts, forward parity) so the perf trajectory
+is tracked run over run.  See ``docs/BENCHMARKS.md`` for what every field
+means.  Run:
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
                                            [--dilated-json PATH]
                                            [--serve-json PATH]
                                            [--slo-json PATH]
                                            [--spatial-json PATH]
+                                           [--quant-json PATH]
 
 ``--quick`` keeps the oracle-checked Fig.-7, dilated, and serving
 wall-clocks (with short timing loops and 10x instead of 100x open-loop
@@ -46,6 +49,9 @@ def main() -> None:
     ap.add_argument("--spatial-json", default="BENCH_spatial.json",
                     help="where to write the plane-parallel JSON "
                          "('' disables)")
+    ap.add_argument("--quant-json", default="BENCH_quant.json",
+                    help="where to write the quantized-superpack JSON "
+                         "('' disables)")
     args = ap.parse_args()
 
     from benchmarks import (dilated_conv, fig7_speedup, fig8_memory,
@@ -67,6 +73,11 @@ def main() -> None:
         from benchmarks import spatial_bench
         print("# plane-parallel — shard_map halo exchange vs single device")
         spatial_bench.main(quick=args.quick, json_path=args.spatial_json)
+    if args.quant_json:
+        from benchmarks import quant_bench
+        print("# quantized superpacks — int8 bytes / routes / parity "
+              "vs f32 twins")
+        quant_bench.main(quick=args.quick, json_path=args.quant_json)
     if not args.quick:
         from benchmarks import fig8_training
         print("# paper Fig 8 (right) — GAN training speedup (engine VJPs)")

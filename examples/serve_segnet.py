@@ -92,6 +92,12 @@ def main():
     ap.add_argument("--route-cache", default=None,
                     help="route/bucket-cost cache path (default "
                          "$HUGE2_ROUTE_CACHE or ~/.cache/huge2)")
+    ap.add_argument("--wdtype", choices=("float32", "int8"),
+                    default="float32",
+                    help="weight storage dtype: 'int8' serves quantized "
+                         "superpacks (~0.26x weight bytes) and asserts the "
+                         "logit error vs an f32 twin under the documented "
+                         "bound before serving")
     args = ap.parse_args()
 
     policy = None
@@ -101,22 +107,49 @@ def main():
                                    cache_path=args.route_cache)
         cache = at.open_cache(args.route_cache)
     base = segnet.SEGNET if args.full else segnet.SEGNET_TINY
-    cfg = dataclasses.replace(base, autotune=policy)
+    cfg = dataclasses.replace(base, autotune=policy, wdtype=args.wdtype)
 
     key = jax.random.PRNGKey(0)
     t0 = time.perf_counter()
     params, _ = segnet.segnet_init(key, cfg)
     plans = segnet.segnet_plans(cfg)
     jax.block_until_ready(params)
-    print(f"model load: {cfg.name}, {len(plans)} planned conv sites "
+    print(f"model load: {cfg.name} (wdtype={cfg.wdtype}), "
+          f"{len(plans)} planned conv sites "
           f"({sum(1 for p in plans if p.spec.kind == 'dilated')} dilated) "
           f"in {(time.perf_counter() - t0) * 1e3:.1f} ms")
+
+    if args.wdtype == "int8":
+        # quantized-serving gate: same init key through an f32 twin config,
+        # logits compared on one random batch.  Documented bound: each of
+        # the L conv layers contributes at most ~1/2 an int8 grid step of
+        # relative weight error (0.5/127 ≈ 0.4%), and the ReLU cascade
+        # compounds at worst additively — rel L∞ ≤ L/127 with ~3x measured
+        # headroom on the zoo configs (see docs/BENCHMARKS.md).
+        twin = dataclasses.replace(cfg, name=cfg.name + "-f32twin",
+                                   wdtype="float32")
+        params_f, _ = segnet.segnet_init(key, twin)
+        xq = jax.random.uniform(jax.random.PRNGKey(7),
+                                (4, cfg.in_hw, cfg.in_hw, cfg.in_c),
+                                minval=-1.0, maxval=1.0)
+        lq = segnet.segnet_apply(params, xq, cfg)
+        lf = segnet.segnet_apply(params_f, xq, twin)
+        rel = float(jnp.max(jnp.abs(lq - lf)) / jnp.max(jnp.abs(lf)))
+        bound = len(plans) / 127.0
+        qb = sum(w.nbytes() for k, w in params.items() if k.startswith("w"))
+        fb = sum(int(w.nbytes) for k, w in params_f.items()
+                 if k.startswith("w"))
+        print(f"int8 weights: {qb / fb:.2f}x f32 bytes "
+              f"({qb} vs {fb}); logit rel err {rel:.4f} "
+              f"(bound {bound:.4f} = {len(plans)} layers / 127)")
+        assert rel <= bound, (rel, bound)
+        del params_f
 
     def serve_fn(x):
         # logits -> per-pixel class ids; argmax rides inside the jit
         return jnp.argmax(segnet.segnet_apply(params, x, cfg), axis=-1)
 
-    cache_key = f"serve_segnet/{cfg.name}"
+    cache_key = f"serve_segnet/{cfg.name}/{cfg.wdtype}"
     proto = np.zeros((cfg.in_hw, cfg.in_hw, cfg.in_c), np.float32)
     cp, be = build_control_plane(serve_fn, proto,
                                  max_wait_ms=args.max_wait_ms, cache=cache,

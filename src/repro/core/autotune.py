@@ -153,8 +153,8 @@ def device_fingerprint() -> dict:
 
 def spec_key(spec: ConvSpec) -> str:
     """Deterministic cache key over every plan-relevant spec constant.
-    The spatial suffix only appears for device-tiled specs, so every
-    pre-existing cache entry keeps its key."""
+    The spatial / wdtype suffixes only appear for device-tiled / quantized
+    specs, so every pre-existing cache entry keeps its key."""
     (ph, pw) = spec.padding
     key = (f"{spec.kind}:{spec.in_hw[0]}x{spec.in_hw[1]}"
            f":c{spec.in_c}->{spec.out_c}"
@@ -165,6 +165,8 @@ def spec_key(spec: ConvSpec) -> str:
            f":{spec.dtype}:{spec.backend}")
     if spec.spatial != (1, 1):
         key += f":sp{spec.spatial[0]}x{spec.spatial[1]}"
+    if spec.wdtype != "float32":
+        key += f":w{spec.wdtype}"
     return key
 
 
@@ -178,6 +180,7 @@ def spec_to_json(spec: ConvSpec) -> dict:
         "padding": [list(p) for p in spec.padding],
         "dilation": list(spec.dilation),
         "spatial": list(spec.spatial),
+        "wdtype": spec.wdtype,
     }
 
 
@@ -404,6 +407,7 @@ def candidate_routes(plan: ConvPlan, batch: int) -> tuple[Route, ...]:
     the backward, not a tunable)."""
     spec = plan.spec
     itemsize = jnp.dtype(spec.dtype).itemsize
+    witemsize = planmod._weight_itemsize(spec)
     c, n = spec.in_c, spec.out_c
     oh, ow = plan.out_hw
     want_pallas = spec.backend == "pallas" or (
@@ -418,13 +422,15 @@ def candidate_routes(plan: ConvPlan, batch: int) -> tuple[Route, ...]:
         wg = spec.in_hw[1] + glw + ghw
         if want_pallas:
             tiles = pick_fused_tiles(hg, wg, c, n, plan.total_taps,
-                                     plan.sum_uv, oh, ow, itemsize)
+                                     plan.sum_uv, oh, ow, itemsize,
+                                     witemsize=witemsize)
             if tiles is not None:
                 cands.append(Route(batch, "pallas", tiles))
             if plan.uniform and oh % spec.strides[0] == 0 \
                     and ow % spec.strides[1] == 0:
                 tiled = pick_tiled_transposed(c, n, plan.total_taps,
-                                              plan.phases, itemsize)
+                                              plan.phases, itemsize,
+                                              witemsize=witemsize)
                 if tiled is not None:
                     c_t, n_t, sp = tiled
                     cands.append(Route(batch, "pallas", (c_t, n_t),
@@ -446,12 +452,13 @@ def candidate_routes(plan: ConvPlan, batch: int) -> tuple[Route, ...]:
     fused_ok = (4 * batch * oh * ow * r * s * c
                 <= planmod._PLANE_BYTES_MAX)
     if want_pallas:
-        tiles = pick_vmem_tiles(hp, wp, c, n, r, s, oh, ow, itemsize)
+        tiles = pick_vmem_tiles(hp, wp, c, n, r, s, oh, ow, itemsize,
+                                witemsize=witemsize)
         if tiles is not None:
             cands.append(Route(batch, "pallas", tiles, fused_bwd=fused_ok))
         dil = spec.dilation if spec.kind == "dilated" else (1, 1)
         tiled = pick_tiled_single(c, n, r, s, oh, ow, spec.strides, dil,
-                                  itemsize)
+                                  itemsize, witemsize=witemsize)
         if tiled is not None:
             c_t, n_t, sp = tiled
             cands.append(Route(batch, "pallas", (c_t, n_t),

@@ -157,10 +157,12 @@ def norm_padding(padding, k_hw) -> tuple[Pair, Pair]:
     return (tuple(a), tuple(b))
 
 
-def pick_vmem_tiles(hp, wp, c, n, r, s, oh, ow, itemsize):
+def pick_vmem_tiles(hp, wp, c, n, r, s, oh, ow, itemsize, witemsize=None):
     """Largest MXU-aligned (C_t, N_t) whose working set fits VMEM.
 
     Plan-time replacement for the old per-call ``kernels.ops._pick_tiles``.
+    ``witemsize`` is the *weight* itemsize when it differs from the
+    activation's (int8 superpacks: 1 byte/elem + the f32 scale rows).
     """
     from repro.kernels.untangled_conv import vmem_bytes_estimate
     for n_t in (256, 128, 64, 32, 16, 8):
@@ -168,12 +170,14 @@ def pick_vmem_tiles(hp, wp, c, n, r, s, oh, ow, itemsize):
             if c_t > max(c, 8) * 2 or n_t > max(n, 8) * 2:
                 continue
             if vmem_bytes_estimate(hp, wp, min(c_t, c), r, s, min(n_t, n),
-                                   oh, ow, itemsize) <= _VMEM_BUDGET:
+                                   oh, ow, itemsize,
+                                   witemsize=witemsize) <= _VMEM_BUDGET:
                 return min(c_t, c), min(n_t, n)
     return None
 
 
-def pick_fused_tiles(hg, wg, c, n, total_taps, sum_uv, oh, ow, itemsize):
+def pick_fused_tiles(hg, wg, c, n, total_taps, sum_uv, oh, ow, itemsize,
+                     witemsize=None):
     """(C_t, N_t) for the multi-phase fused kernel: the working set is the
     whole global plane + the superpack tile + per-phase f32 scratch + the
     full interleaved output block."""
@@ -184,7 +188,7 @@ def pick_fused_tiles(hg, wg, c, n, total_taps, sum_uv, oh, ow, itemsize):
                 continue
             if vmem_bytes_estimate_fused(
                     hg, wg, min(c_t, c), total_taps, min(n_t, n), sum_uv,
-                    oh, ow, itemsize) <= _VMEM_BUDGET:
+                    oh, ow, itemsize, witemsize=witemsize) <= _VMEM_BUDGET:
                 return min(c_t, c), min(n_t, n)
     return None
 
@@ -194,7 +198,8 @@ def _spatial_cands(extent: int) -> tuple[int, ...]:
     return tuple(dict.fromkeys(min(t, extent) for t in (128, 64, 32, 16, 8)))
 
 
-def pick_tiled_single(c, n, r, s, oh, ow, strides, dilation, itemsize):
+def pick_tiled_single(c, n, r, s, oh, ow, strides, dilation, itemsize,
+                      witemsize=None):
     """(C_t, N_t, (T_oh, T_ow)) for the spatially tiled single-correlation
     kernel, or None.  N tiles are maximized *first*: every N-tile revisit
     re-streams the full halo'd C range of the tile (total halo DMA per
@@ -215,12 +220,13 @@ def pick_tiled_single(c, n, r, s, oh, ow, strides, dilation, itemsize):
                     tin_w = halo_extent(tow, s, sw, dw)
                     if vmem_bytes_estimate_tiled(
                             tin_h, tin_w, min(c_t, c), r * s, min(n_t, n),
-                            toh * tow, itemsize) <= _VMEM_BUDGET:
+                            toh * tow, itemsize,
+                            witemsize=witemsize) <= _VMEM_BUDGET:
                         return min(c_t, c), min(n_t, n), (toh, tow)
     return None
 
 
-def pick_tiled_transposed(c, n, total_taps, phases, itemsize):
+def pick_tiled_transposed(c, n, total_taps, phases, itemsize, witemsize=None):
     """(C_t, N_t, (T_u, T_v)) for the spatially tiled multi-phase deconv
     kernel, or None.  Tile sizes are in *phase-output* coordinates (the
     interleaved output tile is (T_u·s_h, T_v·s_w)); the halo covers the
@@ -242,7 +248,7 @@ def pick_tiled_transposed(c, n, total_taps, phases, itemsize):
                     if vmem_bytes_estimate_tiled(
                             tin_h, tin_w, min(c_t, c), total_taps,
                             min(n_t, n), len(phases) * tu * tv,
-                            itemsize) <= _VMEM_BUDGET:
+                            itemsize, witemsize=witemsize) <= _VMEM_BUDGET:
                         return min(c_t, c), min(n_t, n), (tu, tv)
     return None
 
@@ -269,12 +275,20 @@ class ConvSpec:
     # (``core.spatial``).  Part of the cache key: a tiled site plans its
     # own routes (``Route.dev_tiles``).  (1, 1) = single-device, always.
     spatial: Pair = (1, 1)
+    # weight *storage* dtype: 'float32' (dense superpack) or 'int8' (the
+    # quantized superpack — ``pack`` emits a ``QuantizedSuperpack`` with
+    # per-tap-row f32 scales, routes account 1 byte/weight-elem).
+    # Activations and accumulation stay ``dtype``/f32 regardless.
+    wdtype: str = "float32"
+
+
+_WDTYPES = ("float32", "int8")
 
 
 def conv_spec(kind: str, x_shape: Sequence[int], kernel_shape: Sequence[int],
               *, strides=(1, 1), padding=((0, 0), (0, 0)), dilation=(1, 1),
               dtype=None, backend: str = "auto",
-              spatial: Pair = (1, 1)) -> ConvSpec:
+              spatial: Pair = (1, 1), wdtype: str = "float32") -> ConvSpec:
     """Build a normalized (cache-canonical) spec from array shapes."""
     r, s, c, n = kernel_shape
     if x_shape[-1] != c:
@@ -286,7 +300,57 @@ def conv_spec(kind: str, x_shape: Sequence[int], kernel_shape: Sequence[int],
         padding=norm_padding(padding, (r, s)),
         dilation=tuple(int(v) for v in dilation),
         dtype=str(jnp.dtype(dtype)) if dtype is not None else "float32",
-        backend=backend, spatial=tuple(int(v) for v in spatial))
+        backend=backend, spatial=tuple(int(v) for v in spatial),
+        wdtype=str(wdtype))
+
+
+def _weight_itemsize(spec: ConvSpec) -> int:
+    """Per-element byte cost of the *stored* weights for VMEM/route
+    accounting — 1 for the int8 superpack (scale rows are charged
+    separately by the estimators), the activation itemsize otherwise."""
+    return 1 if spec.wdtype == "int8" else jnp.dtype(spec.dtype).itemsize
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(eq=False)
+class QuantizedSuperpack:
+    """The int8 superpack: the tap-major weight buffer quantized per row.
+
+    ``q`` is the ``(rows, N)`` int8 buffer in the exact row order the f32
+    superpack uses (transposed: phase-concatenated taps; conv/dilated: tap
+    ``t = m·S + n`` owns rows ``[t·C, (t+1)·C)``); ``scale`` is the f32
+    ``(rows, 1)`` per-tap-row scale column riding with it — appended to the
+    layout, so slicing rows of ``q`` and ``scale`` together yields a
+    dequantizable panel at any plan-time offset.  Scales come from
+    ``runtime.compress.quantize_int8_rows`` (symmetric, max/127, floored),
+    which bounds the per-element weight error by ``0.5 · scale[row]``.
+
+    Registered as a pytree so it rides through jit / custom_vjp / serving
+    param trees like any other leaf pair."""
+
+    q: jax.Array                  # (rows, N) int8
+    scale: jax.Array              # (rows, 1) f32
+
+    def tree_flatten(self):
+        return (self.q, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    def dequant(self) -> jax.Array:
+        """The f32 superpack view — a row-broadcast multiply that XLA fuses
+        into the consuming GEMM (the dequant-on-the-fly read)."""
+        from repro.runtime.compress import dequantize_int8
+        return dequantize_int8(self.q, self.scale)
+
+    def nbytes(self) -> int:
+        """Stored bytes: 1/elem for ``q`` plus the f32 scale rows."""
+        return int(self.q.size) + 4 * int(self.scale.size)
 
 
 # ---------------------------------------------------------------------------
@@ -419,16 +483,18 @@ def _single_route_1dev(spec: ConvSpec, hp: int, wp: int, out_hw: Pair,
     fused_ok = 4 * batch * oh * ow * r * s * c <= _PLANE_BYTES_MAX
     want_pallas = spec.backend == "pallas" or (
         spec.backend == "auto" and jax.default_backend() == "tpu")
+    witemsize = _weight_itemsize(spec)
     if want_pallas:
         # the 'pallas' verdict is a *tile*-fits check: whole-plane residency
         # when it fits (no halo waste), else spatial output tiling — plane
         # size alone never pushes a site off the Pallas route
-        tiles = pick_vmem_tiles(hp, wp, c, n, r, s, oh, ow, itemsize)
+        tiles = pick_vmem_tiles(hp, wp, c, n, r, s, oh, ow, itemsize,
+                                witemsize=witemsize)
         if tiles is not None:
             return Route(batch, "pallas", tiles, fused_bwd=fused_ok)
         dil = spec.dilation if spec.kind == "dilated" else (1, 1)
         tiled = pick_tiled_single(c, n, r, s, oh, ow, spec.strides, dil,
-                                  itemsize)
+                                  itemsize, witemsize=witemsize)
         if tiled is not None:
             c_t, n_t, sp = tiled
             return Route(batch, "pallas", (c_t, n_t), fused_bwd=fused_ok,
@@ -463,15 +529,17 @@ def _transposed_route_1dev(spec: ConvSpec, hg: int, wg: int, out_hw: Pair,
         return Route(batch, "taps", None)
     want_pallas = spec.backend == "pallas" or (
         spec.backend == "auto" and jax.default_backend() == "tpu")
+    witemsize = _weight_itemsize(spec)
     if want_pallas:
         tiles = pick_fused_tiles(hg, wg, c, n, total_taps, sum_uv, oh, ow,
-                                 itemsize)
+                                 itemsize, witemsize=witemsize)
         if tiles is not None:
             return Route(batch, "pallas", tiles)
         # big planes: spatially tiled kernel (uniform phases — equivalently
         # out % stride == 0 — so the interleaved output tiles block cleanly)
         if uniform and oh % spec.strides[0] == 0 and ow % spec.strides[1] == 0:
-            tiled = pick_tiled_transposed(c, n, total_taps, phases, itemsize)
+            tiled = pick_tiled_transposed(c, n, total_taps, phases, itemsize,
+                                          witemsize=witemsize)
             if tiled is not None:
                 c_t, n_t, sp = tiled
                 return Route(batch, "pallas", (c_t, n_t), sp_tiles=sp)
@@ -577,10 +645,16 @@ class ConvPlan:
         tap-major flatten ``(R·S·C, N)`` — tap ``t = m·S + n`` owns rows
         ``[t·C, (t+1)·C)``; dilation changes the *plan geometry*, never the
         packed layout, so a dilated kernel packs bit-identically to a dense
-        one."""
+        one.
+
+        ``wdtype='int8'`` specs emit a ``QuantizedSuperpack`` instead: the
+        same tap-major rows quantized per row (``runtime.compress
+        .quantize_int8_rows``) with the f32 scale column appended — the
+        quantize-at-pack half of the checkpoint round-trip."""
         if self.spec.kind != "transposed":
             r, s = self.spec.kernel_hw
-            return kernel.reshape(r * s * self.spec.in_c, self.spec.out_c)
+            packed = kernel.reshape(r * s * self.spec.in_c, self.spec.out_c)
+            return self._maybe_quantize(packed)
         subs = dec.decompose_kernel(kernel, self.spec.strides,
                                     self.spec.padding)
         c, n = self.spec.in_c, self.spec.out_c
@@ -591,20 +665,36 @@ class ConvPlan:
                 continue
             segs.append(subs[ex.q].reshape(th * tw * c, n))
         if not segs:
-            return jnp.zeros((0, n), kernel.dtype)
-        return jnp.concatenate(segs, axis=0)
+            packed = jnp.zeros((0, n), kernel.dtype)
+        else:
+            packed = jnp.concatenate(segs, axis=0)
+        return self._maybe_quantize(packed)
+
+    def _maybe_quantize(self, packed):
+        """f32 superpack -> ``QuantizedSuperpack`` when the spec stores int8
+        weights (idempotent: already-quantized buffers pass through)."""
+        if self.spec.wdtype != "int8" or isinstance(packed,
+                                                    QuantizedSuperpack):
+            return packed
+        from repro.runtime.compress import quantize_int8_rows
+        q, scale = quantize_int8_rows(packed.astype(jnp.float32))
+        return QuantizedSuperpack(q, scale)
 
     def as_superpack(self, packed):
         """Adapt legacy weight layouts onto the superpack; superpack arrays
         pass through unchanged.  Transposed: per-phase dicts ({'q0x1': buf}
         or {(0,1): buf}) from pre-superpack checkpoints.  'conv'/'dilated':
         full (R,S,C,N) HWIO kernels from pre-superpack params (the flatten
-        is free — same memory order)."""
+        is free — same memory order).  ``wdtype='int8'`` specs quantize any
+        float layout they adapt, so f32 checkpoints load straight into a
+        quantized plan; a ``QuantizedSuperpack`` passes through unchanged."""
+        if isinstance(packed, QuantizedSuperpack):
+            return packed
         if not isinstance(packed, dict):
             if self.spec.kind != "transposed" and getattr(
                     packed, "ndim", 2) == 4:
                 return self.pack(packed)
-            return packed
+            return self._maybe_quantize(packed)
         segs = []
         for ex in self.phases:
             if ex.taps[0] * ex.taps[1] == 0:
@@ -612,18 +702,23 @@ class ConvPlan:
             sub = packed[ex.key] if ex.key in packed else packed[ex.q]
             segs.append(sub.reshape(-1, self.spec.out_c))
         if not segs:
-            return jnp.zeros((0, self.spec.out_c), self.spec.dtype)
-        return jnp.concatenate(segs, axis=0)
+            return self._maybe_quantize(
+                jnp.zeros((0, self.spec.out_c), self.spec.dtype))
+        return self._maybe_quantize(jnp.concatenate(segs, axis=0))
 
     def unpack(self, packed):
         """Packed weights -> full (R,S,C,N) kernel (offline use only).
         Accepts the superpack, a full HWIO kernel, or (transposed) a legacy
         per-phase dict; round-trips ``pack`` exactly, so checkpoints survive
-        the layout migration."""
+        the layout migration.  A ``QuantizedSuperpack`` dequantizes first
+        (``runtime.compress.dequantize_int8``), so an int8 checkpoint
+        round-trips to HWIO within one quantization step per element."""
+        packed = self.as_superpack(packed)
+        if isinstance(packed, QuantizedSuperpack):
+            packed = packed.dequant()
         if self.spec.kind != "transposed":
             r, s = self.spec.kernel_hw
             return packed.reshape(r, s, self.spec.in_c, self.spec.out_c)
-        packed = self.as_superpack(packed)
         r, s = self.spec.kernel_hw
         c, n = self.spec.in_c, self.spec.out_c
         (sh, sw) = self.spec.strides
@@ -699,6 +794,9 @@ def _plan_conv_heuristic(spec: ConvSpec) -> ConvPlan:
     bound only matters for workloads cycling through thousands of distinct
     shapes, which evict oldest-first rather than grow unbounded)."""
     t0 = time.perf_counter()
+    if spec.wdtype not in _WDTYPES:
+        raise ValueError(f"unsupported wdtype {spec.wdtype!r} "
+                         f"(supported: {_WDTYPES})")
     itemsize = jnp.dtype(spec.dtype).itemsize
     h, w = spec.in_hw
     r, s = spec.kernel_hw
@@ -806,6 +904,31 @@ def plan_cache_clear():
 # ---------------------------------------------------------------------------
 # executors (all geometry is plan-time constant)
 # ---------------------------------------------------------------------------
+
+def _deq(packed):
+    """The f32 superpack view of either layout: identity on dense buffers,
+    the dequant-on-the-fly broadcast multiply on a ``QuantizedSuperpack``
+    (one ``convert_element_type`` + one ``mul`` ahead of the consuming
+    GEMM — every fused route keeps its single dot_general)."""
+    if isinstance(packed, QuantizedSuperpack):
+        return packed.dequant()
+    return packed
+
+
+def _weight_cotangent(packed, dk):
+    """The backward's cotangent for the packed operand.  Dense superpacks
+    take the f32 dK directly.  Quantized superpacks chain through
+    ``w = q · scale``: the int8 codes are non-differentiable (float0 —
+    there is nothing to train there), the scale column gets the exact
+    ``dscale[row] = Σ_n dK[row, n] · q[row, n]``."""
+    if not isinstance(packed, QuantizedSuperpack):
+        return dk.astype(packed.dtype)
+    import numpy as np
+    dscale = jnp.sum(dk.astype(jnp.float32) * packed.q.astype(jnp.float32),
+                     axis=-1, keepdims=True).astype(packed.scale.dtype)
+    dq = np.zeros(packed.q.shape, jax.dtypes.float0)
+    return QuantizedSuperpack(dq, dscale)
+
 
 def _exec_phase(xp: jax.Array, sub4: jax.Array, path: str, tiles: Pair | None,
                 taps: Pair, out_hw: Pair, strides: Pair, dilation: Pair,
@@ -975,26 +1098,29 @@ def _transposed_fwd(plan: ConvPlan, x, packed, interpret=None):
         # autotune-only route: the per-phase executor measured faster than
         # any fused whole-conv launch on this host (pads per phase, so it
         # bypasses the global plane below)
-        y = _transposed_per_phase(plan, x4, packed)
+        y = _transposed_per_phase(plan, x4, _deq(packed))
         return y.reshape(lead + y.shape[1:])
     xg = _global_plane(plan, x4)
     if path == "pallas":
         from repro.kernels.untangled_conv import untangled_deconv2d_pallas
+        quant = isinstance(packed, QuantizedSuperpack)
         y = untangled_deconv2d_pallas(
-            xg, packed, phases=plan.phases, out_hw=plan.out_hw,
+            xg, packed.q if quant else packed,
+            scales=packed.scale if quant else None,
+            phases=plan.phases, out_hw=plan.out_hw,
             strides=spec.strides, sum_uv=plan.sum_uv,
             c_tile=route.tiles[0], n_tile=route.tiles[1],
             sp_tiles=route.sp_tiles, out_dtype=x.dtype, interpret=interpret)
     elif path in ("fused_tap", "fused_plane"):
         fwd = _fused_tap_fwd if path == "fused_tap" else _fused_plane_fwd
-        outs = fwd(plan, xg, packed)
+        outs = fwd(plan, xg, _deq(packed))
         y = dec.interleave_uniform(outs, spec.strides, plan.out_hw) \
             .astype(x.dtype) if plan.uniform else dec.interleave_phases(
                 {ex.q: o.astype(x.dtype)
                  for ex, o in zip(plan.phases, outs)},
                 spec.strides, plan.out_hw)
     else:
-        y = _taps_fallback_fwd(plan, xg, packed)
+        y = _taps_fallback_fwd(plan, xg, _deq(packed))
     return y.reshape(lead + y.shape[1:])
 
 
@@ -1060,26 +1186,31 @@ def _single_fwd(plan: ConvPlan, x, packed, interpret=None):
     path = route.path
     if path == "pallas":
         from repro.kernels.untangled_conv import untangled_conv2d_superpack_pallas
+        quant = isinstance(packed, QuantizedSuperpack)
         y = untangled_conv2d_superpack_pallas(
-            xp, packed, taps_hw=(r, s), strides=strides,
+            xp, packed.q if quant else packed,
+            scales=packed.scale if quant else None,
+            taps_hw=(r, s), strides=strides,
             rhs_dilation=dilation, c_tile=route.tiles[0],
             n_tile=route.tiles[1], sp_tiles=route.sp_tiles,
             out_dtype=x.dtype, interpret=interpret)
     elif path == "fused_tap":
         # ONE wide GEMM: tap views concatenated channel-major in superpack
-        # row order against the whole (R·S·C, N) buffer.  Exact FLOPs.
+        # row order against the whole (R·S·C, N) buffer (dequantized on the
+        # fly for int8 superpacks — still exactly one dot_general).
         buf = jnp.concatenate(
             [_single_tap_view(xp, m, nn, strides, dilation, out_hw)
              for m in range(r) for nn in range(s)], axis=-1)
-        y = jax.lax.dot_general(buf, packed, (((3,), (0,)), ((), ())),
+        y = jax.lax.dot_general(buf, _deq(packed), (((3,), (0,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         y = y.astype(x.dtype)
     else:
         # per-tap shift-and-add GEMMs; panels are superpack rows [t·C,(t+1)·C)
+        w = _deq(packed)
         acc = None
         for (m, nn, row) in plan.dx_taps:
             xs = _single_tap_view(xp, m, nn, strides, dilation, out_hw)
-            panel = jax.lax.slice(packed, [row * c, 0], [(row + 1) * c, n])
+            panel = jax.lax.slice(w, [row * c, 0], [(row + 1) * c, n])
             t = jax.lax.dot_general(xs, panel, (((3,), (0,)), ((), ())),
                                     preferred_element_type=jnp.float32)
             acc = t if acc is None else acc + t
@@ -1112,10 +1243,11 @@ def _pt_bwd(plan, res, dy):
     dy_p = pad_or_crop(dy4, plan.bwd_pad)
 
     # dx — strided-conv form, panels fetched from the superpack at the
-    # plan-time row offsets.
+    # plan-time row offsets (dequantized once for int8 superpacks).
+    wdq = _deq(packed)
     acc = None
     for (m, nn, row) in plan.dx_taps:
-        panel = jax.lax.slice(packed, [row * c, 0],
+        panel = jax.lax.slice(wdq, [row * c, 0],
                               [(row + 1) * c, spec.out_c])   # (C, N)
         wnd = jax.lax.slice(
             dy_p, [0, m, nn, 0],
@@ -1149,10 +1281,10 @@ def _pt_bwd(plan, res, dy):
         sub = jnp.stack(rows, 0)                      # (T_h, T_w, C, N)
         dk_segs.append(sub.reshape(th * tw * c, spec.out_c))
     if dk_segs:
-        dk = jnp.concatenate(dk_segs, axis=0).astype(packed.dtype)
+        dk = jnp.concatenate(dk_segs, axis=0)
     else:
-        dk = jnp.zeros(packed.shape, packed.dtype)
-    return dx, dk
+        dk = jnp.zeros(packed.shape, jnp.float32)
+    return dx, _weight_cotangent(packed, dk)
 
 
 _planned_transposed.defvjp(_pt_fwd, _pt_bwd)
@@ -1207,9 +1339,10 @@ def _ps_bwd(plan, res, dy):
     # (one wide GEMM over the (ΣT, C, N) view when the buffer fits), each
     # tap's plane scattered back through the exact transpose of its forward
     # strided/dilated read.
+    wdq = _deq(packed)
     g = None
     if fused_bwd:
-        w3 = packed.reshape(r * s, c, n)
+        w3 = wdq.reshape(r * s, c, n)
         g = jax.lax.dot_general(dy4, w3, (((3,), (2,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         # g: (B, OH, OW, ΣT, C)
@@ -1218,7 +1351,7 @@ def _ps_bwd(plan, res, dy):
         if g is not None:
             gt = g[..., row, :]
         else:
-            panel = jax.lax.slice(packed, [row * c, 0], [(row + 1) * c, n])
+            panel = jax.lax.slice(wdq, [row * c, 0], [(row + 1) * c, n])
             gt = jax.lax.dot_general(dy4, panel, (((3,), (1,)), ((), ())),
                                      preferred_element_type=jnp.float32)
         dxp = dxp.at[:, m * dh:m * dh + (oh - 1) * sh + 1:sh,
@@ -1244,7 +1377,7 @@ def _ps_bwd(plan, res, dy):
                 dy4, (((0, 1, 2), (0, 1, 2)), ((), ())),
                 preferred_element_type=jnp.float32)
              for (m, nn, _) in plan.dx_taps], axis=0)
-    return dx, dk.astype(packed.dtype)
+    return dx, _weight_cotangent(packed, dk)
 
 
 _planned_single.defvjp(_ps_fwd, _ps_bwd)

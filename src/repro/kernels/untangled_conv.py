@@ -60,13 +60,29 @@ from jax.experimental.pallas import tpu as pltpu
 Pair = tuple[int, int]
 
 
-def _kernel(x_ref, k_ref, o_ref, acc_ref, *, taps_hw: Pair, strides: Pair,
+def _tap_panel(k_ref, s_ref, t: int):
+    """Tap ``t``'s ``(C_t, N_t)`` MXU panel.  Dense superpacks read the raw
+    VMEM tile; quantized superpacks carry per-tap-row scales in ``s_ref``
+    (``(ΣT, C_t, 1)``) and dequantize here — int8 tile → f32 row-broadcast
+    multiply — so the MXU dot below runs f32 into the existing f32 scratch.
+    The scale sits on the *contraction* dim C, so it cannot be folded into
+    the accumulator after the dot; per-panel pre-scaling is the exact
+    placement."""
+    panel = k_ref[t]
+    if s_ref is None:
+        return panel
+    return panel.astype(jnp.float32) * s_ref[t]
+
+
+def _kernel(x_ref, k_ref, *rest, taps_hw: Pair, strides: Pair,
             dilation: Pair, out_hw: Pair, n_c_tiles: int):
     """Single-correlation kernel over the tap-major superpack: ``k_ref`` is
     ``(R·S, C_t, N_t)`` — tap ``t = m·S + n``'s panel is one contiguous VMEM
     tile, the same row order ``ConvPlan.pack`` emits, so the strided and the
     dilated kind run the *same* kernel (dilation only moves the tap's read
-    origin inside the resident plane)."""
+    origin inside the resident plane).  An int8 superpack rides with a third
+    input ref of per-tap-row scales (see ``_tap_panel``)."""
+    s_ref, o_ref, acc_ref = rest if len(rest) == 3 else (None, *rest)
     r, s = taps_hw
     sh, sw = strides
     dh, dw = dilation
@@ -86,7 +102,8 @@ def _kernel(x_ref, k_ref, o_ref, acc_ref, *, taps_hw: Pair, strides: Pair,
                 (m * dh + (oh - 1) * sh + 1, n * dw + (ow - 1) * sw + 1,
                  x.shape[2]),
                 (sh, sw, 1))
-            acc += jnp.dot(xs.reshape(oh * ow, xs.shape[2]), k_ref[m * s + n],
+            acc += jnp.dot(xs.reshape(oh * ow, xs.shape[2]),
+                           _tap_panel(k_ref, s_ref, m * s + n),
                            preferred_element_type=jnp.float32)
     acc_ref[...] = acc
 
@@ -138,7 +155,7 @@ def _halo_stream(x_any, buf, sem, origin):
     return buf[slot]
 
 
-def _tiled_kernel(x_any, k_ref, o_ref, buf, sem, acc_ref, *, taps_hw: Pair,
+def _tiled_kernel(x_any, k_ref, *rest, taps_hw: Pair,
                   strides: Pair, dilation: Pair, tile_hw: Pair,
                   n_c_tiles: int):
     """Spatially tiled single-correlation kernel: one halo'd output tile per
@@ -147,6 +164,8 @@ def _tiled_kernel(x_any, k_ref, o_ref, buf, sem, acc_ref, *, taps_hw: Pair,
     the MXU runs the current tap loop).  Tap/C-tile accumulation order is
     identical to ``_kernel``, so the output is bit-compatible with the
     whole-plane route."""
+    s_ref, o_ref, buf, sem, acc_ref = \
+        rest if len(rest) == 5 else (None, *rest)
     r, s = taps_hw
     sh, sw = strides
     dh, dw = dilation
@@ -167,7 +186,8 @@ def _tiled_kernel(x_any, k_ref, o_ref, buf, sem, acc_ref, *, taps_hw: Pair,
                 (m * dh + (toh - 1) * sh + 1, n * dw + (tow - 1) * sw + 1,
                  x.shape[2]),
                 (sh, sw, 1))
-            acc += jnp.dot(xs.reshape(toh * tow, xs.shape[2]), k_ref[m * s + n],
+            acc += jnp.dot(xs.reshape(toh * tow, xs.shape[2]),
+                           _tap_panel(k_ref, s_ref, m * s + n),
                            preferred_element_type=jnp.float32)
     acc_ref[...] = acc
 
@@ -182,10 +202,22 @@ def halo_extent(tile: int, taps: int, stride: int, dilation: int) -> int:
     return (tile - 1) * stride + (taps - 1) * dilation + 1
 
 
+def _scale_tiles(scales, total_taps: int, c: int, cp: int):
+    """Per-tap-row scales ``(ΣT·C, 1)`` → the kernel's ``(ΣT, C, 1)`` view,
+    zero-padded along C to the C-tile grid (the matching q rows are zero
+    there too, so padded lanes contribute exactly nothing)."""
+    assert scales.shape == (total_taps * c, 1), (scales.shape, total_taps, c)
+    s3 = scales.reshape(total_taps, c, 1)
+    if cp != c:
+        s3 = jnp.pad(s3, ((0, 0), (0, cp - c), (0, 0)))
+    return s3
+
+
 def untangled_conv2d_superpack_pallas(x: jax.Array, superpack: jax.Array, *,
                                       taps_hw: Pair,
                                       strides: Pair = (1, 1),
                                       rhs_dilation: Pair = (1, 1),
+                                      scales: jax.Array | None = None,
                                       c_tile: int = 128, n_tile: int = 128,
                                       sp_tiles: Pair | None = None,
                                       out_dtype=None,
@@ -197,7 +229,9 @@ def untangled_conv2d_superpack_pallas(x: jax.Array, superpack: jax.Array, *,
     dilated kernel is never zero-inserted; taps read the raw plane at
     ``m·d_h`` / ``n·d_w`` offsets.  ``sp_tiles=(T_oh, T_ow)`` selects the
     spatially tiled grid (halo'd output tiles, double-buffered input DMA)
-    instead of whole-plane VMEM residency."""
+    instead of whole-plane VMEM residency.  ``scales`` (``(R·S·C, 1)`` f32)
+    marks an int8 quantized superpack: 1-byte weight tiles in VMEM,
+    dequantized per tap panel into the same f32 MXU chain."""
     b, hp, wp, c = x.shape
     r, s = taps_hw
     n = superpack.shape[1]
@@ -213,9 +247,9 @@ def untangled_conv2d_superpack_pallas(x: jax.Array, superpack: jax.Array, *,
     if sp_tiles is not None:
         return _conv_superpack_tiled(
             x, superpack, taps_hw=taps_hw, strides=strides,
-            rhs_dilation=rhs_dilation, c_tile=c_tile, n_tile=n_tile,
-            sp_tiles=sp_tiles, out_hw=(oh, ow), out_dtype=out_dtype,
-            interpret=interpret)
+            rhs_dilation=rhs_dilation, scales=scales, c_tile=c_tile,
+            n_tile=n_tile, sp_tiles=sp_tiles, out_hw=(oh, ow),
+            out_dtype=out_dtype, interpret=interpret)
 
     k3 = superpack.reshape(r * s, c, n)
     c_tile = min(c_tile, c)
@@ -230,28 +264,34 @@ def untangled_conv2d_superpack_pallas(x: jax.Array, superpack: jax.Array, *,
     n_c_tiles = cp // c_tile
 
     grid = (b, np_ // n_tile, n_c_tiles)
+    in_specs = [
+        pl.BlockSpec((1, hp, wp, c_tile), lambda b_, n_, c_: (b_, 0, 0, c_)),
+        pl.BlockSpec((r * s, c_tile, n_tile),
+                     lambda b_, n_, c_: (0, c_, n_)),
+    ]
+    operands = [x, k3]
+    if scales is not None:
+        in_specs.append(pl.BlockSpec((r * s, c_tile, 1),
+                                     lambda b_, n_, c_: (0, c_, 0)))
+        operands.append(_scale_tiles(scales, r * s, c, cp))
     out = pl.pallas_call(
         functools.partial(_kernel, taps_hw=(r, s), strides=strides,
                           dilation=rhs_dilation, out_hw=(oh, ow),
                           n_c_tiles=n_c_tiles),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, hp, wp, c_tile), lambda b_, n_, c_: (b_, 0, 0, c_)),
-            pl.BlockSpec((r * s, c_tile, n_tile),
-                         lambda b_, n_, c_: (0, c_, n_)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, oh, ow, n_tile),
                                lambda b_, n_, c_: (b_, 0, 0, n_)),
         out_shape=jax.ShapeDtypeStruct((b, oh, ow, np_), out_dtype),
         scratch_shapes=[pltpu.VMEM((oh * ow, n_tile), jnp.float32)],
         interpret=interpret,
-    )(x, k3)
+    )(*operands)
     return out[..., :n]
 
 
 def _conv_superpack_tiled(x, superpack, *, taps_hw, strides, rhs_dilation,
-                          c_tile, n_tile, sp_tiles, out_hw, out_dtype,
-                          interpret):
+                          scales, c_tile, n_tile, sp_tiles, out_hw,
+                          out_dtype, interpret):
     """Spatially tiled grid for the single-correlation superpack kernel:
     ``(B, OH/T_oh, OW/T_ow, N/N_t, C/C_t)``, C innermost."""
     b, hp, wp, c = x.shape
@@ -284,16 +324,22 @@ def _conv_superpack_tiled(x, superpack, *, taps_hw, strides, rhs_dilation,
     n_c_tiles = cp // c_tile
 
     grid = (b, n_oi, n_oj, np_ // n_tile, n_c_tiles)
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec((r * s, c_tile, n_tile),
+                     lambda b_, i_, j_, n_, c_: (0, c_, n_)),
+    ]
+    operands = [x, k3]
+    if scales is not None:
+        in_specs.append(pl.BlockSpec((r * s, c_tile, 1),
+                                     lambda b_, i_, j_, n_, c_: (0, c_, 0)))
+        operands.append(_scale_tiles(scales, r * s, c, cp))
     out = pl.pallas_call(
         functools.partial(_tiled_kernel, taps_hw=(r, s), strides=strides,
                           dilation=rhs_dilation, tile_hw=(toh, tow),
                           n_c_tiles=n_c_tiles),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.ANY),
-            pl.BlockSpec((r * s, c_tile, n_tile),
-                         lambda b_, i_, j_, n_, c_: (0, c_, n_)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, toh, tow, n_tile),
                                lambda b_, i_, j_, n_, c_: (b_, i_, j_, n_)),
         out_shape=jax.ShapeDtypeStruct((b, n_oi * toh, n_oj * tow, np_),
@@ -302,7 +348,7 @@ def _conv_superpack_tiled(x, superpack, *, taps_hw, strides, rhs_dilation,
                         pltpu.SemaphoreType.DMA((2,)),
                         pltpu.VMEM((toh * tow, n_tile), jnp.float32)],
         interpret=interpret,
-    )(x, k3)
+    )(*operands)
     return out[:, :oh, :ow, :n]
 
 
@@ -324,7 +370,7 @@ def untangled_conv2d_pallas(x: jax.Array, kernel: jax.Array, *,
         out_dtype=out_dtype, interpret=interpret)
 
 
-def _deconv_kernel(x_ref, k_ref, o_ref, acc_ref, *, phases, strides: Pair,
+def _deconv_kernel(x_ref, k_ref, *rest, phases, strides: Pair,
                    n_c_tiles: int):
     """Multi-phase transposed conv: every phase's taps over one VMEM
     residency of the padded plane, flushed as direct interleaved writes.
@@ -332,7 +378,10 @@ def _deconv_kernel(x_ref, k_ref, o_ref, acc_ref, *, phases, strides: Pair,
     ``phases`` is a static tuple of per-phase records
     ``(q_h, q_w, tap_off, T_h, T_w, xoff_h, xoff_w, U, V, acc_off)`` — all
     plan-time constants, so the loop fully unrolls into an MXU matmul chain.
+    An int8 superpack rides with a third input ref of per-tap-row scales
+    (see ``_tap_panel``).
     """
+    s_ref, o_ref, acc_ref = rest if len(rest) == 3 else (None, *rest)
     sh, sw = strides
     ci = pl.program_id(2)
 
@@ -350,7 +399,7 @@ def _deconv_kernel(x_ref, k_ref, o_ref, acc_ref, *, phases, strides: Pair,
             xs = jax.lax.slice(x, (xh + ti, xw + tj, 0),
                                (xh + ti + u, xw + tj + v, x.shape[2]))
             acc += jnp.dot(xs.reshape(u * v, xs.shape[2]),
-                           k_ref[tap_off + t],
+                           _tap_panel(k_ref, s_ref, tap_off + t),
                            preferred_element_type=jnp.float32)
         acc_ref[pl.ds(acc_off, u * v), :] = acc
 
@@ -366,7 +415,9 @@ def _deconv_kernel(x_ref, k_ref, o_ref, acc_ref, *, phases, strides: Pair,
 
 def untangled_deconv2d_pallas(xg: jax.Array, superpack: jax.Array, *,
                               phases, out_hw: Pair, strides: Pair,
-                              sum_uv: int, c_tile: int = 128,
+                              sum_uv: int,
+                              scales: jax.Array | None = None,
+                              c_tile: int = 128,
                               n_tile: int = 128,
                               sp_tiles: Pair | None = None, out_dtype=None,
                               interpret: bool | None = None) -> jax.Array:
@@ -378,7 +429,8 @@ def untangled_deconv2d_pallas(xg: jax.Array, superpack: jax.Array, *,
     inside the kernel — no stack/transpose pass afterwards.
     ``sp_tiles=(T_u, T_v)`` (phase-output coordinates; uniform phases only)
     selects the spatially tiled grid with halo'd, double-buffered input
-    slices instead of whole-plane VMEM residency.
+    slices instead of whole-plane VMEM residency.  ``scales`` (``(ΣT·C, 1)``
+    f32) marks an int8 quantized superpack, dequantized per tap panel.
     """
     b, hg, wg, c = xg.shape
     n = superpack.shape[1]
@@ -389,9 +441,9 @@ def untangled_deconv2d_pallas(xg: jax.Array, superpack: jax.Array, *,
         interpret = jax.default_backend() == "cpu"
     if sp_tiles is not None:
         return _deconv_tiled(xg, superpack, phases=phases, out_hw=out_hw,
-                             strides=strides, c_tile=c_tile, n_tile=n_tile,
-                             sp_tiles=sp_tiles, out_dtype=out_dtype,
-                             interpret=interpret)
+                             strides=strides, scales=scales, c_tile=c_tile,
+                             n_tile=n_tile, sp_tiles=sp_tiles,
+                             out_dtype=out_dtype, interpret=interpret)
 
     k3 = superpack.reshape(total_taps, c, n)
     c_tile = min(c_tile, c)
@@ -410,21 +462,27 @@ def untangled_deconv2d_pallas(xg: jax.Array, superpack: jax.Array, *,
          ex.xoff[0], ex.xoff[1], ex.out_hw[0], ex.out_hw[1], ex.acc_off)
         for ex in phases)
     grid = (b, np_ // n_tile, n_c_tiles)
+    in_specs = [
+        pl.BlockSpec((1, hg, wg, c_tile), lambda b_, n_, c_: (b_, 0, 0, c_)),
+        pl.BlockSpec((total_taps, c_tile, n_tile),
+                     lambda b_, n_, c_: (0, c_, n_)),
+    ]
+    operands = [xg, k3]
+    if scales is not None:
+        in_specs.append(pl.BlockSpec((total_taps, c_tile, 1),
+                                     lambda b_, n_, c_: (0, c_, 0)))
+        operands.append(_scale_tiles(scales, total_taps, c, cp))
     out = pl.pallas_call(
         functools.partial(_deconv_kernel, phases=meta, strides=strides,
                           n_c_tiles=n_c_tiles),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, hg, wg, c_tile), lambda b_, n_, c_: (b_, 0, 0, c_)),
-            pl.BlockSpec((total_taps, c_tile, n_tile),
-                         lambda b_, n_, c_: (0, c_, n_)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, oh, ow, n_tile),
                                lambda b_, n_, c_: (b_, 0, 0, n_)),
         out_shape=jax.ShapeDtypeStruct((b, oh, ow, np_), out_dtype),
         scratch_shapes=[pltpu.VMEM((sum_uv, n_tile), jnp.float32)],
         interpret=interpret,
-    )(xg, k3)
+    )(*operands)
     return out[..., :n]
 
 
@@ -442,7 +500,7 @@ def deconv_tap_span(phases) -> tuple[Pair, Pair]:
     return ((min_h, max_h), (min_w, max_w))
 
 
-def _deconv_tiled_kernel(x_any, k_ref, o_ref, buf, sem, acc_ref, *, phases,
+def _deconv_tiled_kernel(x_any, k_ref, *rest, phases,
                          strides: Pair, tile_uv: Pair, min_off: Pair,
                          n_c_tiles: int):
     """Spatially tiled multi-phase transposed conv: one interleaved output
@@ -450,6 +508,8 @@ def _deconv_tiled_kernel(x_any, k_ref, o_ref, buf, sem, acc_ref, *, phases,
     tuple ``(q_h, q_w, tap_off, T_h, T_w, xoff_h, xoff_w)``; every phase's
     taps read the one double-buffered halo'd input tile at plan-time offsets
     relative to the phase-origin span ``min_off``."""
+    s_ref, o_ref, buf, sem, acc_ref = \
+        rest if len(rest) == 5 else (None, *rest)
     sh, sw = strides
     tu, tv = tile_uv
     mh, mw = min_off
@@ -471,7 +531,7 @@ def _deconv_tiled_kernel(x_any, k_ref, o_ref, buf, sem, acc_ref, *, phases,
                                (xh - mh + ti + tu, xw - mw + tj + tv,
                                 x.shape[2]))
             acc += jnp.dot(xs.reshape(tu * tv, xs.shape[2]),
-                           k_ref[tap_off + t],
+                           _tap_panel(k_ref, s_ref, tap_off + t),
                            preferred_element_type=jnp.float32)
         acc_ref[pl.ds(pi * tu * tv, tu * tv), :] = acc
 
@@ -483,8 +543,8 @@ def _deconv_tiled_kernel(x_any, k_ref, o_ref, buf, sem, acc_ref, *, phases,
                 blk.reshape(tu, tv, blk.shape[-1]).astype(o_ref.dtype))
 
 
-def _deconv_tiled(xg, superpack, *, phases, out_hw, strides, c_tile, n_tile,
-                  sp_tiles, out_dtype, interpret):
+def _deconv_tiled(xg, superpack, *, phases, out_hw, strides, scales, c_tile,
+                  n_tile, sp_tiles, out_dtype, interpret):
     """Spatially tiled grid for the multi-phase deconv kernel:
     ``(B, U/T_u, V/T_v, N/N_t, C/C_t)``, C innermost.  Requires uniform
     phases (all share (U, V) — equivalently ``out % stride == 0``)."""
@@ -522,16 +582,22 @@ def _deconv_tiled(xg, superpack, *, phases, out_hw, strides, c_tile, n_tile,
     meta = tuple((ex.q[0], ex.q[1], ex.tap_off, ex.taps[0], ex.taps[1],
                   ex.xoff[0], ex.xoff[1]) for ex in phases)
     grid = (b, n_oi, n_oj, np_ // n_tile, n_c_tiles)
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec((total_taps, c_tile, n_tile),
+                     lambda b_, i_, j_, n_, c_: (0, c_, n_)),
+    ]
+    operands = [xg, k3]
+    if scales is not None:
+        in_specs.append(pl.BlockSpec((total_taps, c_tile, 1),
+                                     lambda b_, i_, j_, n_, c_: (0, c_, 0)))
+        operands.append(_scale_tiles(scales, total_taps, c, cp))
     out = pl.pallas_call(
         functools.partial(_deconv_tiled_kernel, phases=meta, strides=strides,
                           tile_uv=(tu, tv), min_off=(mh, mw),
                           n_c_tiles=n_c_tiles),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.ANY),
-            pl.BlockSpec((total_taps, c_tile, n_tile),
-                         lambda b_, i_, j_, n_, c_: (0, c_, n_)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, tu * sh, tv * sw, n_tile),
                                lambda b_, i_, j_, n_, c_: (b_, i_, j_, n_)),
         out_shape=jax.ShapeDtypeStruct(
@@ -541,51 +607,75 @@ def _deconv_tiled(xg, superpack, *, phases, out_hw, strides, c_tile, n_tile,
                         pltpu.VMEM((len(phases) * tu * tv, n_tile),
                                    jnp.float32)],
         interpret=interpret,
-    )(xg, k3)
+    )(*operands)
     return out[:, :oh, :ow, :n]
 
 
-def vmem_bytes_estimate(hp, wp, c_tile, r, s, n_tile, oh, ow, itemsize=4):
+def _weight_tile_bytes(total_taps, c_tile, n_tile, itemsize, witemsize):
+    """Superpack-tile VMEM bytes.  ``witemsize`` is the *weight* element
+    width when it differs from the activation ``itemsize`` (int8 superpacks:
+    1 byte/elem) — the quantized tile also carries its per-tap-row f32 scale
+    column (``ΣT · C_t`` values, 4 bytes each).  ``witemsize=None`` means
+    weights ride at the activation width (the dense f32 layout)."""
+    if witemsize is None:
+        witemsize = itemsize
+    bytes_ = witemsize * total_taps * c_tile * n_tile
+    if witemsize != itemsize:
+        bytes_ += 4 * total_taps * c_tile        # scale rows (always f32)
+    return bytes_
+
+
+def vmem_bytes_estimate(hp, wp, c_tile, r, s, n_tile, oh, ow, itemsize=4,
+                        witemsize=None):
     """Working-set estimate used by the dispatcher to pick tile sizes.
 
     Thin (r, s) wrapper over ``vmem_bytes_estimate_superpack`` — one owner
     for the formula.  The accumulator scratch is always f32 (4 bytes/elem)
     regardless of the input dtype; only the plane, kernel, and output blocks
-    scale with ``itemsize``.
+    scale with ``itemsize`` (the kernel block with ``witemsize`` when
+    quantized weights make them differ).
     """
     return vmem_bytes_estimate_superpack(hp, wp, c_tile, r * s, n_tile,
-                                         oh, ow, itemsize)
+                                         oh, ow, itemsize, witemsize)
 
 
 def vmem_bytes_estimate_fused(hg, wg, c_tile, total_taps, n_tile, sum_uv,
-                              oh, ow, itemsize=4):
+                              oh, ow, itemsize=4, witemsize=None):
     """Working set of the fused multi-phase kernel: global plane block +
-    superpack tile + full interleaved output block, plus the per-phase f32
-    accumulator scratch (always 4 bytes/elem)."""
-    return itemsize * (hg * wg * c_tile + total_taps * c_tile * n_tile +
-                       oh * ow * n_tile) + 4 * sum_uv * n_tile
+    superpack tile (1-byte elements + f32 scale rows when quantized) + full
+    interleaved output block, plus the per-phase f32 accumulator scratch
+    (always 4 bytes/elem)."""
+    return itemsize * (hg * wg * c_tile + oh * ow * n_tile) \
+        + _weight_tile_bytes(total_taps, c_tile, n_tile, itemsize,
+                             witemsize) \
+        + 4 * sum_uv * n_tile
 
 
 def vmem_bytes_estimate_superpack(hp, wp, c_tile, total_taps, n_tile,
-                                  oh, ow, itemsize=4):
+                                  oh, ow, itemsize=4, witemsize=None):
     """Working set of the single-correlation superpack kernel — the
     dilation-aware estimate: ``hp``/``wp`` are padded-plane dims that grow
     with the dilated tap reach ``(R-1)·d``, while the superpack tile stays
     ``total_taps = R·S`` rows no matter the dilation (no zero-inserted
-    kernel is ever resident).  f32 accumulator always at 4 bytes/elem."""
-    return itemsize * (hp * wp * c_tile + total_taps * c_tile * n_tile +
-                       oh * ow * n_tile) + 4 * oh * ow * n_tile
+    kernel is ever resident).  The superpack tile shrinks to 1 byte/elem
+    (+ f32 scale rows) for int8 weights.  f32 accumulator always at
+    4 bytes/elem."""
+    return itemsize * (hp * wp * c_tile + oh * ow * n_tile) \
+        + _weight_tile_bytes(total_taps, c_tile, n_tile, itemsize,
+                             witemsize) \
+        + 4 * oh * ow * n_tile
 
 
 def vmem_bytes_estimate_tiled(tin_h, tin_w, c_tile, total_taps, n_tile,
-                              acc_rows, itemsize=4):
+                              acc_rows, itemsize=4, witemsize=None):
     """Working set of the spatially tiled kernels (both kinds):
 
     - ``2 · tin_h · tin_w · C_t`` — the halo'd input tile, **twice** (the
       double buffer: one slot computing, one streaming the next halo
       slice), at the input itemsize;
     - ``total_taps · C_t · N_t`` — the superpack tile (R·S taps for the
-      single-correlation kind, ΣT for the multi-phase deconv);
+      single-correlation kind, ΣT for the multi-phase deconv), at the
+      weight itemsize (1 byte + f32 scale rows when quantized);
     - ``acc_rows · N_t`` — the output block at the input itemsize *plus*
       the f32 accumulator at a fixed 4 bytes/elem.  ``acc_rows`` is the
       output-tile pixel count: ``T_oh·T_ow`` (single) or ``s_h·s_w·T_u·T_v``
@@ -594,6 +684,7 @@ def vmem_bytes_estimate_tiled(tin_h, tin_w, c_tile, total_taps, n_tile,
     ``tin_* = halo_extent(tile, taps, stride, dilation)`` for the single
     kind; the deconv's halo is the phase tap-origin span plus the tile
     (``deconv_tap_span``)."""
-    return itemsize * (2 * tin_h * tin_w * c_tile +
-                       total_taps * c_tile * n_tile + acc_rows * n_tile) \
+    return itemsize * (2 * tin_h * tin_w * c_tile + acc_rows * n_tile) \
+        + _weight_tile_bytes(total_taps, c_tile, n_tile, itemsize,
+                             witemsize) \
         + 4 * acc_rows * n_tile

@@ -84,6 +84,9 @@ class GANConfig:
     # the fallback, so (2, 1) on a mesh-less host is still correct — set
     # from ``DistContext.spatial_tiles()`` when serving over a spatial mesh
     spatial: tuple[int, int] = (1, 1)
+    # weight storage dtype for every conv site: 'float32' (dense) or 'int8'
+    # (quantized superpacks — ``ConvSpec.wdtype``); activations stay f32
+    wdtype: str = "float32"
 
 
 DCGAN = GANConfig("dcgan", DCGAN_LAYERS)
@@ -105,7 +108,7 @@ def generator_plans(cfg: GANConfig, dtype=jnp.float32) -> tuple[ConvPlan, ...]:
             strides=(l.stride, l.stride),
             padding=deconv_padding(l.kernel, l.stride),
             dtype=str(jnp.dtype(dtype)), backend=cfg.backend,
-            spatial=cfg.spatial),
+            spatial=cfg.spatial, wdtype=cfg.wdtype),
             autotune=cfg.autotune))
     return tuple(plans)
 
@@ -122,7 +125,7 @@ def discriminator_plans(cfg: GANConfig,
             strides=(l.stride, l.stride),
             padding=((k // 2, (k - 1) // 2), (k // 2, (k - 1) // 2)),
             dtype=str(jnp.dtype(dtype)), backend=cfg.backend,
-            spatial=cfg.spatial),
+            spatial=cfg.spatial, wdtype=cfg.wdtype),
             autotune=cfg.autotune))
     return tuple(plans)
 

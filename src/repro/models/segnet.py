@@ -79,6 +79,9 @@ class SegNetConfig:
     # plane-parallel policy: (D_h, D_w) requested device tiling per site
     # (see ``GANConfig.spatial``); single-device fallback is always kept
     spatial: tuple[int, int] = (1, 1)
+    # weight storage dtype for every conv site: 'float32' (dense) or 'int8'
+    # (quantized superpacks — ``ConvSpec.wdtype``); activations stay f32
+    wdtype: str = "float32"
 
     @property
     def layers(self) -> tuple[SegLayer, ...]:
@@ -113,7 +116,7 @@ def segnet_plans(cfg: SegNetConfig, dtype=jnp.float32) -> tuple[ConvPlan, ...]:
             padding=atrous_padding(l.kernel, l.dilation),
             dilation=(l.dilation, l.dilation),
             dtype=str(jnp.dtype(dtype)), backend=cfg.backend,
-            spatial=cfg.spatial),
+            spatial=cfg.spatial, wdtype=cfg.wdtype),
             autotune=cfg.autotune))
     return tuple(plans)
 

@@ -50,6 +50,9 @@ class VAEConfig:
     # plane-parallel policy: (D_h, D_w) requested device tiling per site
     # (see ``GANConfig.spatial``); single-device fallback is always kept
     spatial: tuple[int, int] = (1, 1)
+    # weight storage dtype for every conv site: 'float32' (dense) or 'int8'
+    # (quantized superpacks — ``ConvSpec.wdtype``); activations stay f32
+    wdtype: str = "float32"
 
     @property
     def feat_hw(self) -> int:
@@ -98,7 +101,7 @@ def encoder_plans(cfg: VAEConfig, dtype=jnp.float32) -> tuple[ConvPlan, ...]:
             out_c=l.out_c, kernel_hw=(k, k), strides=(l.stride, l.stride),
             padding=((k // 2, (k - 1) // 2), (k // 2, (k - 1) // 2)),
             dtype=str(jnp.dtype(dtype)), backend=cfg.backend,
-            spatial=cfg.spatial),
+            spatial=cfg.spatial, wdtype=cfg.wdtype),
             autotune=cfg.autotune))
     return tuple(plans)
 
@@ -112,7 +115,7 @@ def decoder_plans(cfg: VAEConfig, dtype=jnp.float32) -> tuple[ConvPlan, ...]:
             strides=(l.stride, l.stride),
             padding=deconv_padding(l.kernel, l.stride),
             dtype=str(jnp.dtype(dtype)), backend=cfg.backend,
-            spatial=cfg.spatial),
+            spatial=cfg.spatial, wdtype=cfg.wdtype),
             autotune=cfg.autotune))
     return tuple(plans)
 

@@ -1,28 +1,76 @@
-"""Error-feedback int8 gradient compression for the slow inter-pod links.
+"""Int8 quantization primitives: gradient compression and the checkpoint /
+superpack weight-quantization home.
 
-Hierarchical DP all-reduce: gradients reduce in-pod at full precision (fast
-ICI), then the *cross-pod* exchange — the bandwidth-scarce hop — carries an
-int8 quantized tensor with a per-tensor scale, and the quantization error is
-fed back into the next step's gradient (Seide et al. 1-bit SGD lineage).
-Exposed as a pure transform so the train step composes it with shard_map
-over the 'pod' axis.
+Two roles, one module:
+
+1. **Error-feedback gradient compression** (``quantize_int8`` /
+   ``crosspod_allreduce_compressed``): gradients exchanged across the
+   data-parallel axis ride as int8 with a per-tensor scale, and the
+   quantization error is fed back into the next step's gradient (Seide et
+   al. 1-bit SGD lineage).  Exposed as a pure transform so the train step
+   composes it with ``shard_map``.
+2. **Checkpoint / superpack quantization** (``quantize_int8_rows`` /
+   ``dequantize_int8``): the per-row symmetric scheme behind
+   ``ConvSpec.wdtype='int8'`` — ``ConvPlan.pack`` quantizes each tap row of
+   the superpacked weight buffer here (one f32 scale per ``(tap, c)`` row),
+   and ``ConvPlan.unpack`` dequantizes through the same primitives so HWIO
+   checkpoints round-trip within one quantization step.  One module owns
+   the rounding/clipping/scale-floor rules for both paths.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+# scale floor: keeps the divide finite for all-zero / subnormal inputs.
+# Applied AFTER the /127 so the floor is the smallest *normal* f32 — a
+# subnormal floor would flush to zero under XLA's FTZ and turn the
+# quantizing divide into 0/0
+_SCALE_FLOOR = float(np.finfo(np.float32).tiny)
+
+# scale ceiling: f32max/127 rounds UP in f32, so the extreme code's
+# dequant 127·scale would overflow to inf; nudge down until the product
+# is finite (error stays far under one grid step at that magnitude)
+_SCALE_MAX = np.float32(np.finfo(np.float32).max) / np.float32(127.0)
+with np.errstate(over="ignore"):        # the probe overflow is the point
+    while not np.isfinite(np.float32(127.0) * _SCALE_MAX):
+        _SCALE_MAX = np.nextafter(_SCALE_MAX, np.float32(0.0))
+_SCALE_MAX = float(_SCALE_MAX)
 
 
 def quantize_int8(g: jax.Array, err: jax.Array):
-    """g, err: f32 -> (q int8, scale f32 scalar, new_err)."""
+    """g, err: f32 -> (q int8, scale f32 scalar, new_err).
+
+    Per-*tensor* symmetric scale with error feedback — the gradient-
+    compression flavor.  ``new_err`` is the quantization residual to carry
+    into the next step's gradient."""
     gc = g + err
-    scale = jnp.maximum(jnp.max(jnp.abs(gc)), 1e-12) / 127.0
+    scale = jnp.clip(jnp.max(jnp.abs(gc)) / 127.0, _SCALE_FLOOR, _SCALE_MAX)
     q = jnp.clip(jnp.round(gc / scale), -127, 127).astype(jnp.int8)
     deq = q.astype(jnp.float32) * scale
     return q, scale, gc - deq
 
 
+def quantize_int8_rows(w: jax.Array):
+    """(rows, N) f32 -> (q int8 (rows, N), scale f32 (rows, 1)).
+
+    Per-*row* symmetric scale ``scale[r] = max|w[r, :]| / 127`` (floored /
+    capped so all-zero, subnormal, and ±f32max rows stay finite both ways
+    through the grid) — the superpack/checkpoint
+    flavor: one scale per tap row of the tap-major weight buffer, so the
+    per-element quantization error is bounded by ``0.5 · scale[r]`` (half a
+    step of the int8 grid) and dequantization is a row-broadcast multiply
+    that fuses into the tap GEMM."""
+    a = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
+    scale = jnp.clip(a / 127.0, _SCALE_FLOOR, _SCALE_MAX).astype(jnp.float32)
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
 def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Shared dequant: broadcasts a scalar (per-tensor) or (rows, 1)
+    (per-row) scale."""
     return q.astype(jnp.float32) * scale
 
 

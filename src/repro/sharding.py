@@ -144,8 +144,16 @@ class DistContext:
         ``constrain``, a mesh-less context is a no-op."""
         if self.mesh is None:
             return params
+        from repro.core.plan import QuantizedSuperpack
 
         def put(path, p, sp):
+            if isinstance(p, QuantizedSuperpack):
+                # quantized superpack: the int8 codes shard exactly like the
+                # dense buffer; the (rows, 1) scale column follows the row
+                # axis only (its singleton N dim is never split)
+                row_sp = P(*tuple(sp)[:1])
+                return QuantizedSuperpack(put(path, p.q, sp),
+                                          put(path, p.scale, row_sp))
             resolved = tuple(self.resolve(sp))
             resolved += (None,) * (len(p.shape) - len(resolved))
             out = []
@@ -171,7 +179,9 @@ class DistContext:
                 out.append(ax)
             return jax.device_put(p, NamedSharding(self.mesh, P(*out)))
 
-        return jax.tree_util.tree_map_with_path(put, params, specs)
+        return jax.tree_util.tree_map_with_path(
+            put, params, specs,
+            is_leaf=lambda x: isinstance(x, QuantizedSuperpack))
 
     def constrain(self, x, spec: Optional[P] = None):
         if self.mesh is None:

@@ -1,0 +1,175 @@
+"""``runtime.compress``: the int8 quantization primitives behind both
+gradient compression and the quantized-superpack checkpoint path.
+
+What this file proves:
+
+- **error feedback converges**: repeatedly quantizing the same gradient
+  with the residual fed back recovers the true sum (the 1-bit-SGD
+  property) — the accumulated dequantized mean tracks the exact mean far
+  tighter than quantizing without feedback, and a constant gradient's
+  *accumulated* error stays bounded while the no-feedback variant's bias
+  grows linearly with step count.
+- **scale edge cases**: all-zero rows (scale floors, q == 0, exact
+  round-trip), subnormal rows (finite scale, no inf/nan anywhere), and
+  ±float32-max rows (no overflow; the extreme element lands on ±127 and
+  round-trips within one step).
+- **one home for the rounding rules**: ``ConvPlan.pack(wdtype='int8')``
+  produces bit-identical codes and scales to calling
+  ``quantize_int8_rows`` on the f32 superpack directly — the checkpoint /
+  superpack path *reuses* these primitives rather than duplicating them.
+(The cross-pod allreduce itself is exercised on a forced multi-device
+mesh in ``test_distributed.py``.)
+
+No hypothesis dependency — this file must run everywhere tier-1 runs.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime.compress import (_SCALE_FLOOR, dequantize_int8,
+                                    init_error_state, quantize_int8,
+                                    quantize_int8_rows)
+
+
+# ---------------------------------------------------------------------------
+# error-feedback convergence
+# ---------------------------------------------------------------------------
+
+def test_error_feedback_recovers_constant_gradient():
+    """Quantizing the SAME gradient T times with feedback: the summed
+    dequantized signal approaches T·g with bounded (not growing) error,
+    while no-feedback quantization repeats one biased step T times."""
+    g = jax.random.normal(jax.random.PRNGKey(0), (64,), jnp.float32) * 0.1
+    T = 50
+    err = jnp.zeros_like(g)
+    acc_fb = jnp.zeros_like(g)
+    for _ in range(T):
+        q, scale, err = quantize_int8(g, err)
+        acc_fb = acc_fb + dequantize_int8(q, scale)
+    # no feedback: the same biased step T times
+    q0, s0, _ = quantize_int8(g, jnp.zeros_like(g))
+    acc_nofb = T * dequantize_int8(q0, s0)
+
+    exact = T * g
+    err_fb = float(jnp.max(jnp.abs(acc_fb - exact)))
+    err_nofb = float(jnp.max(jnp.abs(acc_nofb - exact)))
+    # feedback error stays within ~one quantization step of the LAST
+    # residual; no-feedback bias is T·(per-step error) — linear in T
+    step = float(s0) / 2
+    assert err_fb <= 4 * step, (err_fb, step)
+    assert err_nofb >= 0.5 * T * step or err_nofb > 4 * err_fb
+    assert err_fb < err_nofb / 5
+
+
+def test_error_feedback_mean_converges_over_random_grads():
+    """Over a random gradient stream, the feedback path's cumulative
+    dequantized sum tracks the exact cumulative sum to within one step
+    (the residual), independent of stream length."""
+    key = jax.random.PRNGKey(1)
+    err = jnp.zeros((32,), jnp.float32)
+    acc_q = np.zeros((32,), np.float64)
+    acc = np.zeros((32,), np.float64)
+    worst_step = 0.0
+    for t in range(30):
+        key, k = jax.random.split(key)
+        g = jax.random.normal(k, (32,), jnp.float32)
+        q, scale, err = quantize_int8(g, err)
+        acc_q += np.asarray(dequantize_int8(q, scale), np.float64)
+        acc += np.asarray(g, np.float64)
+        worst_step = max(worst_step, float(scale))
+        # invariant: sum(deq) + err == sum(g) up to f32 round-off
+        drift = np.max(np.abs(acc_q + np.asarray(err, np.float64) - acc))
+        assert drift <= 1e-3 * (t + 1), drift
+    # the residual itself is bounded by one quantization step
+    assert float(jnp.max(jnp.abs(err))) <= worst_step
+
+
+# ---------------------------------------------------------------------------
+# scale edge cases: all-zero, subnormal, ±max
+# ---------------------------------------------------------------------------
+
+def test_all_zero_rows_floor_scale_and_roundtrip_exact():
+    w = jnp.zeros((4, 8), jnp.float32)
+    q, scale = quantize_int8_rows(w)
+    assert np.all(np.asarray(q) == 0)
+    # the floor is the smallest NORMAL f32 (applied after the /127), so it
+    # survives XLA's subnormal flush and the quantizing divide is never 0/0
+    assert np.all(np.asarray(scale) == np.float32(_SCALE_FLOOR))
+    np.testing.assert_array_equal(np.asarray(dequantize_int8(q, scale)),
+                                  np.zeros((4, 8), np.float32))
+
+
+def test_subnormal_rows_stay_finite():
+    tiny = np.float32(_SCALE_FLOOR)          # smallest normal f32
+    w = jnp.array([[tiny, -tiny / 2, 0.0, tiny / 4]], jnp.float32)
+    q, scale = quantize_int8_rows(w)
+    deq = dequantize_int8(q, scale)
+    assert np.all(np.isfinite(np.asarray(scale)))
+    assert np.all(np.isfinite(np.asarray(deq)))
+    assert float(scale[0, 0]) >= _SCALE_FLOOR
+    # error within one step even in the subnormal regime
+    assert np.max(np.abs(np.asarray(deq) - np.asarray(w))) \
+        <= 0.5 * float(scale[0, 0]) * (1 + 1e-5) + _SCALE_FLOOR
+
+
+def test_float32_max_rows_do_not_overflow():
+    fmax = np.float32(np.finfo(np.float32).max)
+    w = jnp.array([[fmax, -fmax, fmax / 3, 0.0]], jnp.float32)
+    q, scale = quantize_int8_rows(w)
+    deq = np.asarray(dequantize_int8(q, scale))
+    assert np.all(np.isfinite(np.asarray(scale)))
+    assert np.all(np.isfinite(deq))
+    assert int(q[0, 0]) == 127 and int(q[0, 1]) == -127
+    # extreme elements round-trip to within one step of the grid
+    step = float(scale[0, 0])
+    assert np.max(np.abs(deq - np.asarray(w, np.float64))) <= step
+    # per-tensor flavor too (gradient spikes must not inf the wire)
+    qg, sg, err = quantize_int8(w[0], jnp.zeros((4,), jnp.float32))
+    assert np.isfinite(float(sg)) and np.all(np.isfinite(np.asarray(err)))
+
+
+def test_clipping_is_symmetric_127():
+    """Codes never reach -128: the symmetric grid keeps dequant unbiased."""
+    w = jax.random.normal(jax.random.PRNGKey(2), (16, 16), jnp.float32)
+    q, _ = quantize_int8_rows(w)
+    assert int(jnp.min(q)) >= -127 and int(jnp.max(q)) <= 127
+
+
+# ---------------------------------------------------------------------------
+# the checkpoint / superpack path REUSES these primitives
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,strides,pads", [
+    ("conv", (1, 1), ((1, 1), (1, 1))),
+    ("transposed", (2, 2), ((2, 3), (2, 3))),
+])
+def test_plan_pack_reuses_quantize_int8_rows(kind, strides, pads):
+    """``ConvPlan.pack`` under ``wdtype='int8'`` == ``quantize_int8_rows``
+    on the f32 superpack, bit for bit (codes AND scales) — one module owns
+    the rounding/clipping/floor rules for both entry points."""
+    from repro.core.plan import conv_spec, plan_conv
+    r = 5 if kind == "transposed" else 3
+    kern = jax.random.normal(jax.random.PRNGKey(3), (r, r, 6, 4),
+                             jnp.float32)
+    spec = conv_spec(kind, (1, 6, 6, 6), kern.shape, strides=strides,
+                     padding=pads)
+    pf = plan_conv(spec)
+    pq = plan_conv(dataclasses.replace(spec, wdtype="int8"))
+    wq = pq.pack(kern)
+    q_want, s_want = quantize_int8_rows(pf.pack(kern))
+    np.testing.assert_array_equal(np.asarray(wq.q), np.asarray(q_want))
+    np.testing.assert_array_equal(np.asarray(wq.scale), np.asarray(s_want))
+    # and unpack dequantizes through the same shared primitive
+    np.testing.assert_array_equal(
+        np.asarray(pq.unpack(wq)),
+        np.asarray(pf.unpack(dequantize_int8(wq.q, wq.scale))))
+
+
+def test_init_error_state_matches_tree():
+    params = {"a": jnp.ones((3, 2)), "b": jnp.zeros((5,))}
+    errs = init_error_state(params)
+    assert errs["a"].shape == (3, 2) and errs["b"].shape == (5,)
+    assert all(float(jnp.max(jnp.abs(e))) == 0.0 for e in errs.values())

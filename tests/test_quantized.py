@@ -1,0 +1,381 @@
+"""Quantized superpacks: int8 tap GEMMs with f32 accumulation, proved
+against the float64 conftest oracle under the analytic per-tap-row bound.
+
+What this file proves:
+
+- **round-trip**: ``pack`` -> ``QuantizedSuperpack`` -> ``unpack`` lands
+  within one quantization step (``0.5 · scale[row]``: symmetric round-to-
+  nearest on the int8 grid) of the original HWIO kernel, per element, for
+  every kind — so f32 checkpoints survive the int8 layout migration.
+- **forward parity under the composed bound**: the quantized executor's
+  output sits inside ``γ-bound(conv(x, K_deq)) + Σ|x|·E_max`` of the f64
+  oracle on the ORIGINAL kernel, where ``E_max`` is the per-element
+  quantization step mapped to HWIO through the layout.  The first term is
+  the existing ULP-scaled accumulation bound (the executor computes
+  ``conv(x, K_deq)`` exactly as an f32 contraction); the second is the
+  worst-case leverage of the weight error — analytic, not an eyeballed
+  rtol.  Checked on conv / dilated / transposed kinds, both backends, and
+  at every batch bucket.
+- **VJP parity**: ``jax.vjp`` through the quantized plan matches the f32
+  plan evaluated on the dequantized weights (same math, different code
+  path) for ``dx``, and the weight cotangent comes back as a
+  ``QuantizedSuperpack`` whose ``q`` leaf is ``float0`` (int leaves have
+  no tangent space) and whose ``dscale = Σ_n dK[row,:]·q[row,:]`` — the
+  exact chain rule through ``W = q · scale``.
+- **jaxpr proofs**: quantized ``fused_tap`` / ``fused_plane`` still lower
+  to exactly ONE ``dot_general`` (the dequant is a broadcast-multiply XLA
+  fuses into the GEMM read, not a second contraction), and quantized
+  Pallas routes to ONE ``pallas_call`` with zero dot_generals outside.
+- **model-zoo threading**: a full int8 SegNet (config ``wdtype``) tracks
+  its f32 twin within the documented ``L/127`` serving bound, and the
+  autotune ``spec_key`` gains the ``:wint8`` suffix without perturbing
+  f32 keys (cache back-compat).
+
+The scale-mapping subtlety everything above leans on: per-row scales live
+in *superpack row order* (transposed rows are phase-concatenated, NOT
+(r,s,c) row-major), so mapping them to HWIO must go through the **f32
+twin's** ``unpack`` — the int8 plan's own ``unpack`` would re-quantize a
+float buffer on the way in (``as_superpack``).
+
+No hypothesis dependency — this file must run everywhere tier-1 runs.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import reference as ref
+from repro.core.plan import (BATCH_BUCKETS, ConvSpec, QuantizedSuperpack,
+                             conv_spec, plan_conv)
+from repro.models.gan import deconv_padding
+from repro.models.segnet import atrous_padding
+
+from tests.conftest import (TOL_GRAD, assert_close, assert_close_ulp,
+                            conv_oracle_f64, count_eqns, ulp_bound)
+
+
+# ---------------------------------------------------------------------------
+# builders + the f64 transposed oracle
+# ---------------------------------------------------------------------------
+
+def twin_plans(kind, x_shape, k_shape, *, strides=(1, 1),
+               padding=((0, 0), (0, 0)), dilation=(1, 1), backend="xla"):
+    """(f32 plan, int8 twin) over the same geometry."""
+    spec = conv_spec(kind, x_shape, k_shape, strides=strides,
+                     padding=padding, dilation=dilation, backend=backend)
+    return plan_conv(spec), plan_conv(dataclasses.replace(spec,
+                                                          wdtype="int8"))
+
+
+def transposed_oracle_f64(x, k, *, strides, padding):
+    """Float64 transposed-conv oracle: lhs-dilate the input by ``strides``
+    (zeros between pixels), then the stride-1 f64 correlation — exactly
+    ``lax.conv_general_dilated(lhs_dilation=strides)``'s formulation, so
+    the ``(y64, amax64)`` pair feeds the same ULP bound as the single-
+    correlation kinds."""
+    x64 = np.asarray(x, np.float64)
+    sh, sw = strides
+    b, h, w, c = x64.shape
+    xd = np.zeros((b, (h - 1) * sh + 1, (w - 1) * sw + 1, c))
+    xd[:, ::sh, ::sw] = x64
+    return conv_oracle_f64(xd, k, padding=padding)
+
+
+def scale_to_hwio(pf, wq):
+    """Per-element quantization step bound ``E_max`` in HWIO coordinates:
+    broadcast the (rows, 1) scale column over the rows and map it through
+    the **f32 twin's** unpack (see module docstring for why the twin)."""
+    sc = pf.unpack(jnp.broadcast_to(wq.scale, wq.q.shape))
+    return 0.5 * np.asarray(sc, np.float64) * (1 + 1e-5) \
+        + np.finfo(np.float32).tiny
+
+
+def oracle_pair(kind, x, k, *, strides, padding, dilation):
+    if kind == "transposed":
+        return transposed_oracle_f64(x, k, strides=strides, padding=padding)
+    return conv_oracle_f64(x, k, strides=strides, dilation=dilation,
+                           padding=padding)
+
+
+# the fixed geometry suite: every kind, strides, dilation, ragged channels
+CASES = [
+    # (kind, b, h, w, c, n, r, s, strides, dil, pads)
+    ("conv", 2, 8, 8, 16, 8, 3, 3, (1, 1), (1, 1), ((1, 1), (1, 1))),
+    ("conv", 1, 9, 7, 7, 5, 3, 2, (2, 2), (1, 1), ((1, 0), (1, 1))),
+    ("dilated", 1, 13, 13, 8, 8, 3, 3, (1, 1), (2, 2), atrous_padding(3, 2)),
+    ("transposed", 2, 4, 4, 16, 8, 5, 5, (2, 2), (1, 1),
+     deconv_padding(5, 2)),
+    ("transposed", 1, 5, 4, 6, 4, 3, 2, (2, 3), (1, 1), ((2, 0), (1, 1))),
+]
+
+
+def check_quant_fwd(kind, b, h, w, c, n, r, s, strides, dil, pads,
+                    backend="xla", seed=0):
+    """Forward within the composed analytic bound (see module docstring)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (b, h, w, c), jnp.float32)
+    kern = jax.random.normal(k2, (r, s, c, n), jnp.float32)
+    pf, pq = twin_plans(kind, x.shape, kern.shape, strides=strides,
+                        padding=pads, dilation=dil, backend=backend)
+    wq = pq.pack(kern)
+    assert isinstance(wq, QuantizedSuperpack) and wq.q.dtype == jnp.int8
+    kd = pq.unpack(wq)                      # dequantized HWIO twin kernel
+    got = np.asarray(pq.apply(x, wq), np.float64)
+
+    # (1) the executor computes conv(x, K_deq) within the γ-bound
+    y64d, amaxd = oracle_pair(kind, x, kd, strides=strides, padding=pads,
+                              dilation=dil)
+    n_terms = r * s * c
+    assert_close_ulp(got, y64d, amaxd, n_terms)
+
+    # (2) composed with the quantization term, it stays within the bound
+    # of the ORIGINAL kernel's oracle: |y_q - y(K)| <= γ·amax + Σ|x|·E_max
+    emax = scale_to_hwio(pf, wq)
+    y64, _ = oracle_pair(kind, x, kern, strides=strides, padding=pads,
+                         dilation=dil)
+    qterm, _ = oracle_pair(kind, np.abs(np.asarray(x, np.float64)), emax,
+                           strides=strides, padding=pads, dilation=dil)
+    bound = ulp_bound(y64d, amaxd, n_terms) + qterm
+    err = np.abs(got - y64)
+    assert np.all(err <= bound), (
+        f"max excess over composed quant bound: {np.max(err - bound):.3e}")
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_quant_fwd_within_composed_bound_xla(case):
+    check_quant_fwd(*case, backend="xla")
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_quant_fwd_within_composed_bound_pallas(case):
+    check_quant_fwd(*case, backend="pallas")
+
+
+def test_transposed_oracle_f64_matches_lax():
+    """Self-validation of the f64 transposed oracle against XLA's
+    lhs-dilated conv (the repo-wide transposed correctness oracle)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    x = jax.random.normal(k1, (2, 4, 5, 6), jnp.float32)
+    k = jax.random.normal(k2, (4, 3, 6, 5), jnp.float32)
+    pads = deconv_padding(4, 2), deconv_padding(3, 2)
+    pads = (pads[0][0], pads[1][1])
+    want = ref.oracle_conv_transpose2d(x, k, strides=(2, 2), padding=pads)
+    y64, amax64 = transposed_oracle_f64(x, k, strides=(2, 2), padding=pads)
+    assert_close_ulp(want, y64, amax64, k.shape[0] * k.shape[1] * k.shape[2])
+
+
+# ---------------------------------------------------------------------------
+# round-trip: pack -> quantize -> unpack within one quantization step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", CASES)
+def test_roundtrip_within_one_step(case):
+    kind, b, h, w, c, n, r, s, strides, dil, pads = case
+    kern = jax.random.normal(jax.random.PRNGKey(7), (r, s, c, n),
+                             jnp.float32)
+    pf, pq = twin_plans(kind, (b, h, w, c), kern.shape, strides=strides,
+                        padding=pads, dilation=dil)
+    wq = pq.pack(kern)
+    assert wq.scale.shape == (wq.q.shape[0], 1)
+    assert wq.scale.dtype == jnp.float32
+    kd = np.asarray(pq.unpack(wq), np.float64)
+    step = scale_to_hwio(pf, wq)            # 0.5·scale/elem (+ f32 slop)
+    err = np.abs(kd - np.asarray(kern, np.float64))
+    assert np.all(err <= step), (
+        f"round-trip exceeds one quantization step by "
+        f"{np.max(err - step):.3e}")
+    # stored bytes: 1/elem codes + f32 scale rows <= half the f32 buffer
+    wf = pf.pack(kern)
+    assert wq.nbytes() <= 0.5 * int(wf.nbytes)
+    # a QuantizedSuperpack passes through adaptation untouched (no
+    # double quantization); f32 HWIO checkpoints load quantized on the
+    # single-correlation kinds (transposed legacy layouts are phase dicts)
+    assert pq.as_superpack(wq) is wq
+    if kind != "transposed":
+        adapted = pq.as_superpack(kern)
+        np.testing.assert_array_equal(np.asarray(adapted.q),
+                                      np.asarray(wq.q))
+
+
+# ---------------------------------------------------------------------------
+# VJP: dx parity vs the dequantized f32 plan, exact dscale chain rule
+# ---------------------------------------------------------------------------
+
+def check_quant_vjp(kind, b, h, w, c, n, r, s, strides, dil, pads,
+                    backend="xla", seed=1):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k1, (b, h, w, c), jnp.float32)
+    kern = jax.random.normal(k2, (r, s, c, n), jnp.float32)
+    pf, pq = twin_plans(kind, x.shape, kern.shape, strides=strides,
+                        padding=pads, dilation=dil, backend=backend)
+    wq = pq.pack(kern)
+    # the f32 plan on the dequantized kernel: pack is a layout gather, so
+    # its rows are bit-equal to dequant(wq) — same math, f32 code path
+    wf = pf.pack(pq.unpack(wq))
+
+    yq, vjp_q = jax.vjp(pq.apply, x, wq)
+    yf, vjp_f = jax.vjp(pf.apply, x, wf)
+    ct = jax.random.normal(k3, yq.shape, jnp.float32)
+    dxq, dwq = vjp_q(ct)
+    dxf, dwf = vjp_f(ct)
+
+    assert_close(yq, yf, TOL_GRAD)
+    assert_close(dxq, dxf, TOL_GRAD)
+    # weight cotangent rides back on the quantized layout: float0 for the
+    # int codes (no tangent space), dscale = Σ_n dK·q per row
+    assert isinstance(dwq, QuantizedSuperpack)
+    assert dwq.q.shape == wq.q.shape
+    assert dwq.q.dtype == jax.dtypes.float0
+    want_dscale = jnp.sum(dwf * wq.q.astype(jnp.float32), axis=1,
+                          keepdims=True)
+    assert_close(dwq.scale, want_dscale, TOL_GRAD)
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_quant_vjp_xla(case):
+    check_quant_vjp(*case, backend="xla")
+
+
+@pytest.mark.parametrize("case", [CASES[0], CASES[3]])
+def test_quant_vjp_pallas(case):
+    check_quant_vjp(*case, backend="pallas")
+
+
+def test_quant_grad_allow_int():
+    """``jax.grad`` over a quantized param tree works with
+    ``allow_int=True`` (the documented training entry for int8 leaves)."""
+    kind, b, h, w, c, n, r, s, strides, dil, pads = CASES[0]
+    x = jax.random.normal(jax.random.PRNGKey(5), (b, h, w, c), jnp.float32)
+    kern = jax.random.normal(jax.random.PRNGKey(6), (r, s, c, n),
+                             jnp.float32)
+    _, pq = twin_plans(kind, x.shape, kern.shape, strides=strides,
+                       padding=pads, dilation=dil)
+    wq = pq.pack(kern)
+    dx, dw = jax.grad(lambda a, w: jnp.sum(pq.apply(a, w) ** 2),
+                      (0, 1), allow_int=True)(x, wq)
+    assert dx.shape == x.shape
+    assert dw.q.dtype == jax.dtypes.float0
+    assert dw.scale.shape == wq.scale.shape
+
+
+# ---------------------------------------------------------------------------
+# every batch bucket, both backends (tiny zoo-scale geometries)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("bucket", BATCH_BUCKETS)
+def test_quant_every_bucket_dilated(bucket, backend):
+    """SegNet-context-shaped dilated site at every serving bucket."""
+    check_quant_fwd("dilated", bucket, 6, 6, 8, 8, 3, 3, (1, 1), (2, 2),
+                    atrous_padding(3, 2), backend=backend, seed=bucket)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("bucket", BATCH_BUCKETS)
+def test_quant_every_bucket_transposed(bucket, backend):
+    """DCGAN-decoder-shaped transposed site at every serving bucket."""
+    check_quant_fwd("transposed", bucket, 4, 4, 8, 8, 4, 4, (2, 2), (1, 1),
+                    deconv_padding(4, 2), backend=backend, seed=bucket)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr proofs: ONE dot_general / ONE pallas_call, quantized
+# ---------------------------------------------------------------------------
+
+def _quant_jaxpr(kind, h, w, c, n, r, s, strides, pads, backend,
+                 dilation=(1, 1)):
+    _, pq = twin_plans(kind, (2, h, w, c), (r, s, c, n), strides=strides,
+                       padding=pads, dilation=dilation, backend=backend)
+    x = jnp.zeros((2, h, w, c), jnp.float32)
+    wq = pq.pack(jnp.zeros((r, s, c, n), jnp.float32))
+    return pq, jax.make_jaxpr(pq.apply)(x, wq)
+
+
+def test_quant_fused_tap_is_single_gemm():
+    """The DCGAN geometry routes fused_tap; quantized it still lowers to
+    exactly one dot_general (dequant fuses into the GEMM read)."""
+    pq, jaxpr = _quant_jaxpr("transposed", 4, 4, 16, 8, 5, 5, (2, 2),
+                             ((2, 3), (2, 3)), "xla")
+    assert pq.path == "fused_tap", pq.path
+    assert count_eqns(jaxpr.jaxpr, "dot_general") == 1
+    assert count_eqns(jaxpr.jaxpr, "pallas_call") == 0
+
+
+def test_quant_fused_plane_is_single_gemm():
+    """The cGAN geometry routes fused_plane; quantized: one dot_general."""
+    pq, jaxpr = _quant_jaxpr("transposed", 8, 8, 16, 8, 4, 4, (2, 2),
+                             ((1, 3), (1, 3)), "xla")
+    assert pq.path == "fused_plane", pq.path
+    assert count_eqns(jaxpr.jaxpr, "dot_general") == 1
+    assert count_eqns(jaxpr.jaxpr, "pallas_call") == 0
+
+
+def test_quant_single_correlation_is_single_gemm():
+    """conv/dilated fused route quantized: still one wide GEMM."""
+    for dil in ((1, 1), (2, 2)):
+        kind = "dilated" if dil != (1, 1) else "conv"
+        pq, jaxpr = _quant_jaxpr(kind, 9, 9, 8, 8, 3, 3, (1, 1),
+                                 atrous_padding(3, dil[0]), "xla",
+                                 dilation=dil)
+        assert pq.path in ("fused_tap", "fused_plane"), pq.path
+        assert count_eqns(jaxpr.jaxpr, "dot_general") == 1
+        assert count_eqns(jaxpr.jaxpr, "pallas_call") == 0
+
+
+@pytest.mark.parametrize("kind,strides,pads", [
+    ("transposed", (2, 2), ((2, 3), (2, 3))),
+    ("conv", (1, 1), ((1, 1), (1, 1))),
+])
+def test_quant_pallas_is_single_launch(kind, strides, pads):
+    r = 5 if kind == "transposed" else 3
+    pq, jaxpr = _quant_jaxpr(kind, 4, 4, 32, 16, r, r, strides, pads,
+                             "pallas")
+    assert pq.path == "pallas" and pq.tiles is not None
+    assert count_eqns(jaxpr.jaxpr, "pallas_call") == 1
+    assert count_eqns(jaxpr.jaxpr, "dot_general") == 0
+
+
+# ---------------------------------------------------------------------------
+# model-zoo threading: int8 SegNet vs its f32 twin, spec_key back-compat
+# ---------------------------------------------------------------------------
+
+def test_segnet_int8_tracks_f32_twin():
+    """Full int8 SegNet (config ``wdtype``) within the documented serving
+    bound: rel L∞ ≤ L/127 (each of the L conv layers contributes at most
+    ~half an int8 grid step of relative weight error; measured ~3x
+    headroom — the serve_segnet gate asserts the same inequality)."""
+    from repro.models import segnet
+    cfg = dataclasses.replace(segnet.SEGNET_TINY, wdtype="int8")
+    twin = dataclasses.replace(cfg, name=cfg.name + "-f32", wdtype="float32")
+    key = jax.random.PRNGKey(0)
+    pq, _ = segnet.segnet_init(key, cfg)
+    pf, _ = segnet.segnet_init(key, twin)
+    plans = segnet.segnet_plans(cfg)
+    assert all(isinstance(pq[f"w{i}"], QuantizedSuperpack)
+               for i in range(len(plans)))
+    x = jax.random.uniform(jax.random.PRNGKey(1),
+                           (2, cfg.in_hw, cfg.in_hw, cfg.in_c),
+                           minval=-1.0, maxval=1.0)
+    lq = segnet.segnet_apply(pq, x, cfg)
+    lf = segnet.segnet_apply(pf, x, twin)
+    rel = float(jnp.max(jnp.abs(lq - lf)) / jnp.max(jnp.abs(lf)))
+    assert rel <= len(plans) / 127.0, rel
+    # the int8 param tree really is smaller than half the f32 one
+    qb = sum(w.nbytes() for k, w in pq.items() if k.startswith("w"))
+    fb = sum(int(w.nbytes) for k, w in pf.items() if k.startswith("w"))
+    assert qb <= 0.5 * fb
+
+
+def test_spec_key_wdtype_suffix_is_backcompat():
+    """f32 keys are byte-identical to pre-quantization keys (no suffix);
+    int8 twins differ only by the ``:wint8`` tail — existing route-cache
+    entries keep their keys."""
+    from repro.core.autotune import spec_key
+    spec = ConvSpec(kind="conv", in_hw=(8, 8), in_c=4, out_c=4,
+                    kernel_hw=(3, 3), padding=((1, 1), (1, 1)))
+    kf = spec_key(spec)
+    kq = spec_key(dataclasses.replace(spec, wdtype="int8"))
+    assert ":w" not in kf
+    assert kq == kf + ":wint8"

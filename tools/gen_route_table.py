@@ -89,6 +89,22 @@ def route_specs():
             kernel_hw=(k, k), padding=atrous_padding(k, d),
             dilation=(d, d))))
 
+    # an engineered large-plane context site whose Pallas verdict provably
+    # improves under 1-byte weights (spatial tiles (128, 16) → (128, 32)):
+    # pins that the quantized VMEM accounting actually moves a verdict, not
+    # just that equal-verdict twins stay equal
+    specs.append(("quantflip_ctx385_c64n256k7", ConvSpec(
+        kind="conv", in_hw=(385, 385), in_c=64, out_c=256,
+        kernel_hw=(7, 7), padding=((3, 3), (3, 3)))))
+
+    # quantized twins of every model-zoo site: int8 superpacks change only
+    # the *weight* itemsize in the VMEM accounting, so any Route flip the
+    # 1-byte tiles cause (taps/tiled → whole-plane, bigger sp_tiles) is
+    # pinned here exactly like the f32 verdicts
+    import dataclasses
+    specs += [(f"{name}_w8", dataclasses.replace(spec, wdtype="int8"))
+              for name, spec in specs]
+
     # plane-parallel requests: the dryrun convplane sites under their device
     # tilings — pins every ``dev_tiles`` verdict per site/bucket (like every
     # other column, pure plan-time arithmetic, identical on all hosts)
