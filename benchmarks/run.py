@@ -12,9 +12,11 @@ plane: per-class tail latency + goodput-under-SLO), and
 single-device on the 385x385 dilated-context and transposed-decoder
 geometries — run in a forced-8-device child process), and
 ``BENCH_quant.json`` (int8 quantized superpacks vs their f32 twins: weight
-bytes, per-bucket route verdicts, forward parity) so the perf trajectory
-is tracked run over run.  See ``docs/BENCHMARKS.md`` for what every field
-means.  Run:
+bytes, per-bucket route verdicts, forward parity), and ``BENCH_unet.json``
+(diffusion U-Net denoising chains — many *sequential* decoder calls per
+request — driven through the control plane, plus the sub-pixel route
+verdicts per site) so the perf trajectory is tracked run over run.  See
+``docs/BENCHMARKS.md`` for what every field means.  Run:
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
                                            [--dilated-json PATH]
@@ -22,6 +24,7 @@ means.  Run:
                                            [--slo-json PATH]
                                            [--spatial-json PATH]
                                            [--quant-json PATH]
+                                           [--unet-json PATH]
 
 ``--quick`` keeps the oracle-checked Fig.-7, dilated, and serving
 wall-clocks (with short timing loops and 10x instead of 100x open-loop
@@ -52,6 +55,9 @@ def main() -> None:
     ap.add_argument("--quant-json", default="BENCH_quant.json",
                     help="where to write the quantized-superpack JSON "
                          "('' disables)")
+    ap.add_argument("--unet-json", default="BENCH_unet.json",
+                    help="where to write the U-Net denoising-chain JSON "
+                         "('' disables)")
     args = ap.parse_args()
 
     from benchmarks import (dilated_conv, fig7_speedup, fig8_memory,
@@ -69,6 +75,9 @@ def main() -> None:
     serve_bench.main(quick=args.quick, json_path=args.serve_json or None)
     print("# serving — open-loop SLO/tail-latency harness (control plane)")
     serve_bench.slo_main(quick=args.quick, json_path=args.slo_json or None)
+    print("# serving — U-Net denoising chains (sequential hops, "
+          "sub-pixel routes)")
+    serve_bench.unet_main(quick=args.quick, json_path=args.unet_json or None)
     if args.spatial_json:
         from benchmarks import spatial_bench
         print("# plane-parallel — shard_map halo exchange vs single device")

@@ -45,12 +45,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.util import format_stats, latency_stats
-from repro.models import gan
+from repro.models import gan, unet
 from repro.serving.control_plane import ControlPlane, ServeRequest
 from repro.serving.image_batcher import DynamicImageBatcher, ImageRequest
 
 JSON_PATH = "BENCH_serve.json"
 SLO_JSON_PATH = "BENCH_slo.json"
+UNET_JSON_PATH = "BENCH_unet.json"
 FIXED_BATCH = 8            # the PR-1 serve_dcgan default
 BURSTS = 24
 BURST_CAP = 16
@@ -300,6 +301,114 @@ def slo_main(print_csv=True, quick=False, json_path=SLO_JSON_PATH):
     return payload
 
 
+def unet_main(print_csv=True, quick=False, json_path=UNET_JSON_PATH):
+    """Denoising-loop serving (``BENCH_unet.json``): N diffusion chains,
+    each ``steps`` *sequential* U-Net calls, driven through the control
+    plane.  Every chain hop is its own request (payload = image + a
+    timestep plane), so in-flight chains at different steps coalesce into
+    shared bucket launches — the sequential-calls-per-request pattern that
+    stresses the batcher and admission estimates in a way one-shot
+    generation doesn't (a chain's end-to-end latency compounds ``steps``
+    queueing delays).  The final image of chain 0 is checked against
+    ``models.unet.denoise_loop`` run offline, so the scheduling never
+    changes the math."""
+    cfg = unet.UNET_TINY
+    steps = 2 if quick else 8
+    n_req = 16 if quick else 64
+    hw, c = cfg.image_hw, cfg.in_c
+    dt = 1.0 / steps
+    params, _ = unet.unet_init(jax.random.PRNGKey(0), cfg)
+
+    def step_fn(payload):
+        """One Euler refinement of a (B, H, W, C+1) batch: image channels
+        plus a constant timestep plane, re-emitted with t - dt."""
+        x, t = payload[..., :c], payload[:, 0, 0, c]
+        x = x - unet.unet_apply(params, x, t, cfg) * dt
+        tp = jnp.broadcast_to(
+            jnp.maximum(t - dt, 0.0)[:, None, None, None],
+            x.shape[:3] + (1,))
+        return jnp.concatenate([x, tp], axis=-1)
+
+    cp = ControlPlane()
+    proto = np.zeros((hw, hw, c + 1), np.float32)
+    be = cp.register_image_model("unet", step_fn, proto,
+                                 buckets=(1, 4, 16), max_wait_ms=1.0)
+    be.warmup()
+
+    rng = np.random.default_rng(3)
+    x0s = rng.standard_normal((n_req, hw, hw, c)).astype(np.float32)
+    t_start, t_end, finals = {}, {}, {}
+    t0 = time.perf_counter()
+    for r in range(n_req):                       # burst: chains start hot
+        pay = np.concatenate([x0s[r], np.ones((hw, hw, 1), np.float32)],
+                             axis=-1)
+        t_start[r] = time.perf_counter()
+        cp.submit(ServeRequest(rid=r * steps, model="unet", payload=pay))
+    while len(t_end) < n_req:
+        finished = cp.pump(drain=True)
+        if not finished and not cp.pending():
+            raise AssertionError("denoising chains stalled with empty queues")
+        for d in finished:
+            r, hop = divmod(d.rid, steps)
+            if hop + 1 < steps:                  # next hop of the chain
+                cp.submit(ServeRequest(rid=r * steps + hop + 1,
+                                       model="unet",
+                                       payload=np.asarray(d.out)))
+            else:
+                t_end[r] = time.perf_counter()
+                finals[r] = np.asarray(d.out)[..., :c]
+    dur = time.perf_counter() - t0
+
+    st = cp.stats()
+    assert st["served"] == n_req * steps, st
+    want = np.asarray(unet.denoise_loop(params, jnp.asarray(x0s[:1]), cfg,
+                                        steps))[0]
+    max_dev = float(np.max(np.abs(finals[0] - want)))
+    chain_ms = [(t_end[r] - t_start[r]) * 1e3 for r in range(n_req)]
+    chain_st = latency_stats([m / 1e3 for m in chain_ms])
+    routes = {site: {"kind": kind, "path": path}
+              for site, (kind, path) in
+              unet.unet_route_summary(cfg).items()}
+    ps_sites = sorted(s for s, r in routes.items()
+                      if r["path"] == "pixel_shuffle")
+
+    payload = {
+        "bench": "unet_denoise", "quick": quick,
+        "backend": jax.default_backend(),
+        "model": cfg.name, "image_hw": hw, "steps": steps,
+        "requests": n_req,
+        "hops_submitted": n_req * steps,
+        "hops_served": st["served"],
+        "buckets": list(be.batcher.buckets),
+        "bucket_cost_ms": {b: v * 1e3
+                           for b, v in be.batcher.bucket_cost_s.items()},
+        "launches": st["per_model"]["unet"]["launches"],
+        "pad_fraction": st["per_model"]["unet"]["pad_fraction"],
+        "duration_s": dur,
+        "throughput_steps_per_s": n_req * steps / dur,
+        "chain_p50_ms": chain_st["p50_ms"],
+        "chain_p95_ms": chain_st["p95_ms"],
+        "routes": routes,
+        "pixel_shuffle_sites": ps_sites,
+        "max_dev_vs_offline_loop": max_dev,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+    if print_csv:
+        print(f"serve_unet,{n_req * steps / dur:.1f},"
+              f"{n_req} chains x {steps} steps in {dur:.2f}s  "
+              f"chain p50 {chain_st['p50_ms']:.1f} "
+              f"p95 {chain_st['p95_ms']:.1f} ms  "
+              f"({payload['launches']} launches, pad "
+              f"{payload['pad_fraction']:.2f}, sub-pixel sites "
+              f"{','.join(ps_sites)}, max dev vs offline loop "
+              f"{max_dev:.1e})"
+              + (f" -> {json_path}" if json_path else ""))
+    return payload
+
+
 if __name__ == "__main__":
     main()
     slo_main()
+    unet_main()

@@ -435,6 +435,9 @@ def candidate_routes(plan: ConvPlan, batch: int) -> tuple[Route, ...]:
                     c_t, n_t, sp = tiled
                     cands.append(Route(batch, "pallas", (c_t, n_t),
                                        sp_tiles=sp))
+        ps = planmod._pixel_shuffle_route(spec, plan.phases, batch)
+        if ps is not None:
+            cands.append(ps)
         plane_bytes = 4 * batch * hg * wg * plan.total_taps * n
         if plane_bytes <= planmod._PLANE_BYTES_MAX:
             cands.append(Route(batch, "fused_plane", None))

@@ -422,10 +422,15 @@ class Route:
     them unchanged."""
 
     batch: int
-    # 'pallas'|'fused_plane'|'fused_tap'|'taps', plus (transposed,
-    # autotune-only) 'per_phase' — the PR-1 per-phase executor promoted to
-    # a first-class route so the tuner can rank it (the heuristic never
-    # emits it; BENCH_fig7 shows it winning on some hosts, e.g. DC2)
+    # 'pallas'|'fused_plane'|'fused_tap'|'taps'|'pixel_shuffle', plus
+    # (transposed, autotune-only) 'per_phase' — the PR-1 per-phase executor
+    # promoted to a first-class route so the tuner can rank it (the
+    # heuristic never emits it; BENCH_fig7 shows it winning on some hosts,
+    # e.g. DC2).  'pixel_shuffle' is the transposed sub-pixel rewrite:
+    # eligible specs (every phase shares (U,V)==(H,W), tap extent and pad)
+    # run as ONE dense stride-1 conv against the (Q,T,C,N) superpack view
+    # followed by depth-to-space — the tap buffer is Q× smaller than
+    # 'fused_tap''s (T views instead of ΣT=Q·T).
     path: str
     tiles: Pair | None            # (C_t, N_t) when path == 'pallas'
     fused_bwd: bool = True
@@ -504,6 +509,48 @@ def _single_route_1dev(spec: ConvSpec, hp: int, wp: int, out_hw: Pair,
     return Route(batch, "taps", None, fused_bwd=False)
 
 
+def _pixel_shuffle_geom(spec: ConvSpec, phases) -> tuple[Pair, tuple[Pair, Pair]] | None:
+    """The sub-pixel rewrite's shared stride-1 footprint, or ``None``.
+
+    A transposed spec is eligible when every phase shares the *same*
+    stride-1 correlation: output extent ``(U, V) == (H, W)`` (so the
+    interleave is an exact ×s_h×s_w depth-to-space), tap extent ``(T_h,
+    T_w)`` and input pad.  Then the Q = s_h·s_w per-phase sub-kernels are
+    one dense ``(T_h, T_w, C, Q·N)`` kernel and the whole conv is a single
+    stride-1 correlation + depth-to-space — zero inserted zeros, exact
+    FLOPs.  ``deconv_padding`` sites with ``k % s == 0`` (cGAN/VAE-decoder
+    k=4 s=2) qualify; k=5 s=2 (DCGAN) does not (phase tap counts 3 vs 2) —
+    exactly the geometry-dependent transposed-vs-sub-pixel tradeoff of
+    arXiv:2107.07647."""
+    if not phases:
+        return None
+    first = phases[0]
+    th, tw = first.taps
+    if th == 0 or tw == 0:
+        return None
+    if first.out_hw != spec.in_hw:
+        return None
+    for ex in phases[1:]:
+        if (ex.taps != first.taps or ex.pad != first.pad
+                or ex.out_hw != first.out_hw):
+            return None
+    return first.taps, first.pad
+
+
+def _pixel_shuffle_route(spec: ConvSpec, phases, batch: int) -> Route | None:
+    """The 'pixel_shuffle' verdict at one bucket: the spec must admit the
+    rewrite and the bucket's tap-stacked GEMM buffer (T views of the input
+    plane, f32) must clear the plane-bytes cap."""
+    geom = _pixel_shuffle_geom(spec, phases)
+    if geom is None:
+        return None
+    (th, tw), _ = geom
+    h, w = spec.in_hw
+    if 4 * batch * th * tw * h * w * spec.in_c > _PLANE_BYTES_MAX:
+        return None
+    return Route(batch, "pixel_shuffle", None)
+
+
 def _transposed_route(spec: ConvSpec, hg: int, wg: int, out_hw: Pair,
                       total_taps: int, sum_uv: int, sum_uvt: int,
                       uniform: bool, phases, itemsize: int,
@@ -543,6 +590,11 @@ def _transposed_route_1dev(spec: ConvSpec, hg: int, wg: int, out_hw: Pair,
             if tiled is not None:
                 c_t, n_t, sp = tiled
                 return Route(batch, "pallas", (c_t, n_t), sp_tiles=sp)
+    # sub-pixel rewrite ahead of the fused routes: exact FLOPs like
+    # fused_tap but a Q×-smaller GEMM buffer, and no plane-GEMM blowup
+    ps = _pixel_shuffle_route(spec, phases, batch)
+    if ps is not None:
+        return ps
     plane_ratio = hg * wg * total_taps / max(1, sum_uvt)
     plane_bytes = 4 * batch * hg * wg * total_taps * n
     if plane_ratio <= _PLANE_RATIO_MAX and plane_bytes <= _PLANE_BYTES_MAX:
@@ -1047,6 +1099,36 @@ def _fused_plane_fwd(plan: ConvPlan, xg: jax.Array, packed: jax.Array):
     return outs
 
 
+def _pixel_shuffle_fwd(plan: ConvPlan, x4: jax.Array, packed: jax.Array):
+    """Sub-pixel route: the eligible transposed conv as ONE dense stride-1
+    correlation + depth-to-space.
+
+    Eligibility (``_pixel_shuffle_geom``) guarantees every phase shares the
+    same pad, tap extent and ``(U, V) == (H, W)`` output, so one padded
+    plane serves all Q phases and the superpack — phase-major ``(Q·T·C,
+    N)`` — reshapes to ``(Q, T, C, N)`` with zero data movement.  The T
+    shared tap views stack to ``(T, B, H, W, C)`` (concat, no transpose)
+    and a single ``dot_general`` contracting (tap, C) against (T, C) yields
+    ``(B, H, W, Q, N)``; the trailing reshape/transpose/reshape IS
+    depth-to-space (phases are q_h-major, matching the ``(s_h, s_w)``
+    split) and is the route's only transpose."""
+    spec = plan.spec
+    sh, sw = spec.strides
+    c, n = spec.in_c, spec.out_c
+    th, tw = plan.phases[0].taps
+    h, w = spec.in_hw
+    xp = pad_or_crop(x4, plan.phases[0].pad)
+    b = xp.shape[0]
+    views = [jax.lax.slice(xp, [0, ti, tj, 0], [b, ti + h, tj + w, c])
+             for ti in range(th) for tj in range(tw)]
+    buf = jnp.stack(views, axis=0)                    # (T, B, H, W, C)
+    w4 = packed.reshape(sh * sw, th * tw, c, n)       # (Q, T, C, N)
+    y = jax.lax.dot_general(buf, w4, (((0, 4), (1, 2)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y = y.reshape(b, h, w, sh, sw, n).transpose(0, 1, 3, 2, 4, 5)
+    return y.reshape(b, h * sh, w * sw, n)
+
+
 def _taps_fallback_fwd(plan: ConvPlan, xg: jax.Array, packed: jax.Array):
     """General fallback: still one global pad (phases read the single
     resident plane through plan-time offsets), but per-phase GEMMs."""
@@ -1099,6 +1181,12 @@ def _transposed_fwd(plan: ConvPlan, x, packed, interpret=None):
         # any fused whole-conv launch on this host (pads per phase, so it
         # bypasses the global plane below)
         y = _transposed_per_phase(plan, x4, _deq(packed))
+        return y.reshape(lead + y.shape[1:])
+    if path == "pixel_shuffle":
+        # sub-pixel route: pads with the shared phase footprint directly
+        # (eligibility guarantees one pad fits all phases), so it bypasses
+        # the global plane below
+        y = _pixel_shuffle_fwd(plan, x4, _deq(packed)).astype(x.dtype)
         return y.reshape(lead + y.shape[1:])
     xg = _global_plane(plan, x4)
     if path == "pallas":

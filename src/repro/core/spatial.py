@@ -60,6 +60,7 @@ import contextlib
 import dataclasses
 import functools
 import math
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -111,65 +112,94 @@ class SpatialPlan:
 
 
 def _single_dim(d: int, h: int, r: int, s: int, dil: int, pad: Pair,
-                oh: int) -> DimTiling | None:
-    """Tiling of one dim of a 'conv'/'dilated' site over ``d`` devices."""
+                oh: int) -> tuple[DimTiling | None, str | None]:
+    """Tiling of one dim of a 'conv'/'dilated' site over ``d`` devices:
+    ``(tiling, None)`` when feasible, ``(None, reason)`` when not."""
     pl, _ = pad
     if d == 1:
-        return DimTiling(1, h, h, h, oh, h, 0, 0, pad)
+        return DimTiling(1, h, h, h, oh, h, 0, 0, pad), None
     if pl < 0:                       # crop-style padding: not worth tiling
-        return None
+        return None, f"crop-style padding (pad lo {pl} < 0)"
     # pad the output to a device multiple; the input pads to OH'·s so that
     # T·s == Hl holds (and to at least H so no real rows are dropped)
     out_pad = d * max(-(-oh // d), -(-(-(-h // s)) // d))
     hp = out_pad * s
     if hp < h:
-        return None
+        return None, f"padded extent {hp} would drop input rows (H={h})"
     block, t = hp // d, out_pad // d
     tin = (t - 1) * s + (r - 1) * dil + 1
     halo_lo = pl
     halo_hi = max(0, tin - block - halo_lo)
     if halo_lo > block or halo_hi > block:
-        return None                  # would need multi-hop exchange
-    return DimTiling(d, h, hp, block, out_pad, tin, halo_lo, halo_hi, (0, 0))
+        return None, (f"halo ({halo_lo}, {halo_hi}) exceeds the {block}-row "
+                      f"device block (needs multi-hop exchange)")
+    return (DimTiling(d, h, hp, block, out_pad, tin, halo_lo, halo_hi,
+                      (0, 0)), None)
 
 
 def _transposed_dim(d: int, h: int, r: int, s: int, pad: Pair
-                    ) -> DimTiling | None:
-    """Tiling of one dim of a transposed site over ``d`` devices.  Needs
+                    ) -> tuple[DimTiling | None, str | None]:
+    """Tiling of one dim of a transposed site over ``d`` devices:
+    ``(tiling, None)`` when feasible, ``(None, reason)`` when not.  Needs
     per-dim uniform phases with ``U == H`` (the 'SAME'-style zoo padding);
     ``gl``/``xh_max`` are H-invariant, so the parent's phase algebra
     transfers to the padded extent unchanged."""
     if d == 1:
         oh = dec.transposed_out_size(h, r, s, pad)
-        return DimTiling(1, h, h, h, oh, h, 0, 0, pad)
+        return DimTiling(1, h, h, h, oh, h, 0, 0, pad), None
     plans = dec.plan_phases_1d(h, r, s, pad)
     if any(p.out_size != h for p in plans):
-        return None                  # non-uniform or U != H: infeasible
+        sizes = sorted({p.out_size for p in plans})
+        return None, (f"transposed phases are non-uniform or U != H "
+                      f"(phase outputs {sizes}, H={h})")
     gl = max(0, max(p.pad[0] for p in plans))
     live = [p for p in plans if p.taps > 0]
     if not live:
-        return None
+        return None, "no live phases"
     xh_max = max(gl - p.pad[0] + p.taps - 1 for p in live)
     hp = d * (-(-h // d))
     block = hp // d                  # == T_u (phase-output rows per device)
     tin = xh_max + block
     halo_lo, halo_hi = gl, max(0, xh_max - gl)
     if halo_lo > block or halo_hi > block:
-        return None
+        return None, (f"halo ({halo_lo}, {halo_hi}) exceeds the {block}-row "
+                      f"device block (needs multi-hop exchange)")
     pl, _ = pad
     lpad_lo = pl - gl * s
     lpad_hi = s * block + r - 2 - (tin - 1) * s - lpad_lo
-    return DimTiling(d, h, hp, block, s * hp, tin, halo_lo, halo_hi,
-                     (lpad_lo, lpad_hi))
+    return (DimTiling(d, h, hp, block, s * hp, tin, halo_lo, halo_hi,
+                      (lpad_lo, lpad_hi)), None)
+
+
+# specs whose infeasible-tiling warning already fired (mirrors
+# ``sharding._REPLICATION_WARNED``): once per process, surviving
+# ``reset()``, so plan-cache clears don't re-warn
+_INFEASIBLE_WARNED: set = set()
+
+
+def _warn_infeasible(spec: ConvSpec, reason: str) -> None:
+    """A spec that *requests* device tiling but cannot be tiled would
+    otherwise silently plan single-device (the ``dev_tiles`` verdict just
+    vanishes) — name the spec and the reason, once."""
+    if spec in _INFEASIBLE_WARNED:
+        return
+    _INFEASIBLE_WARNED.add(spec)
+    warnings.warn(
+        f"spatial_plan: {spec.kind} site {spec.in_hw}x{spec.in_c}->"
+        f"{spec.out_c} k={spec.kernel_hw} s={spec.strides} "
+        f"p={spec.padding} requests device tiling spatial={spec.spatial} "
+        f"but admits no one-hop halo exchange ({reason}) — planning "
+        f"single-device", RuntimeWarning, stacklevel=3)
 
 
 @functools.lru_cache(maxsize=4096)
 def spatial_plan(spec: ConvSpec) -> SpatialPlan | None:
     """The device-tiling geometry for ``spec``, or None when ``spec``
     requests no tiling (``spatial == (1, 1)``) or the geometry cannot be
-    tiled with one-hop halo exchange.  Pure arithmetic over the spec
-    constants — identical on every host, never touches a device (this is
-    what makes ``dev_tiles`` a golden-fixture-stable verdict)."""
+    tiled with one-hop halo exchange (warned once per spec).  Pure
+    arithmetic over the spec constants — identical on every host, never
+    touches a device (this is what makes ``dev_tiles`` a
+    golden-fixture-stable verdict)."""
     d_h, d_w = spec.spatial
     if (d_h, d_w) == (1, 1):
         return None
@@ -177,15 +207,18 @@ def spatial_plan(spec: ConvSpec) -> SpatialPlan | None:
     (sh, sw) = spec.strides
     (ph, pw) = spec.padding
     if spec.kind == "transposed":
-        th = _transposed_dim(d_h, h, r, sh, ph)
-        tw = _transposed_dim(d_w, w, s, sw, pw)
+        th, why_h = _transposed_dim(d_h, h, r, sh, ph)
+        tw, why_w = _transposed_dim(d_w, w, s, sw, pw)
     else:
         (dh, dw) = spec.dilation if spec.kind == "dilated" else (1, 1)
         oh = dec.single_out_size(h, r, sh, dh, ph)
         ow = dec.single_out_size(w, s, sw, dw, pw)
-        th = _single_dim(d_h, h, r, sh, dh, ph, oh)
-        tw = _single_dim(d_w, w, s, sw, dw, pw, ow)
+        th, why_h = _single_dim(d_h, h, r, sh, dh, ph, oh)
+        tw, why_w = _single_dim(d_w, w, s, sw, dw, pw, ow)
     if th is None or tw is None:
+        _warn_infeasible(spec, "; ".join(
+            f"dim {nm}: {why}" for nm, why in (("H", why_h), ("W", why_w))
+            if why))
         return None
     if spec.kind == "transposed":
         out_hw = (dec.transposed_out_size(h, r, sh, ph),

@@ -93,7 +93,9 @@ class ServeRequest:
     priority: str = "interactive"
     slo_ms: Optional[float] = None
     max_new: int = 16                       # LM backends only
-    t_arrival: float = dataclasses.field(default_factory=time.perf_counter)
+    # None = stamped by the control plane's injected clock at submit
+    # (deadline tests / open-loop drivers stamp explicitly, same domain)
+    t_arrival: Optional[float] = None
     t_done: Optional[float] = None
     out: Optional[np.ndarray] = None
     status: str = "queued"
@@ -107,12 +109,15 @@ class ServeRequest:
 
     @property
     def deadline(self) -> Optional[float]:
-        return (None if self.slo_ms is None
-                else self.t_arrival + self.slo_ms / 1e3)
+        if self.slo_ms is None or self.t_arrival is None:
+            return None
+        return self.t_arrival + self.slo_ms / 1e3
 
     @property
     def latency_s(self) -> Optional[float]:
-        return None if self.t_done is None else self.t_done - self.t_arrival
+        if self.t_done is None or self.t_arrival is None:
+            return None
+        return self.t_done - self.t_arrival
 
     @property
     def in_slo(self) -> Optional[bool]:
@@ -133,12 +138,13 @@ class ImageBackend:
     def __init__(self, name: str, serve_fn: Callable, proto: np.ndarray, *,
                  buckets: Sequence[int] = BATCH_BUCKETS,
                  max_wait_ms: float = 2.0, dist=None,
-                 cache=None, cache_key: Optional[str] = None):
+                 cache=None, cache_key: Optional[str] = None,
+                 clock: Callable[[], float] = time.perf_counter):
         self.name = name
         self.proto = np.asarray(proto)
         self.batcher = DynamicImageBatcher(
             serve_fn, buckets=buckets, max_wait_ms=max_wait_ms, dist=dist,
-            cache=cache, cache_key=cache_key or name)
+            cache=cache, cache_key=cache_key or name, clock=clock)
 
     @property
     def max_wait_s(self) -> float:
@@ -259,10 +265,18 @@ class ControlPlane:
     def __init__(self, *, starvation_ms: float = 50.0, injector=None,
                  admission: bool = True, straggler_k: float = 3.0,
                  straggler_warmup: int = 3,
-                 on_fault: Optional[Callable] = None):
+                 on_fault: Optional[Callable] = None,
+                 clock: Callable[[], float] = time.perf_counter):
         self.backends: dict[str, object] = {}
         self.queues: dict[str, dict[str, deque]] = {}
         self.starvation_s = starvation_ms / 1e3
+        # ONE monotonic clock for every scheduling timestamp: arrivals,
+        # admission ('now + est > deadline'), shedding ('now > deadline'),
+        # max-wait expiry — and it is handed down to every image backend's
+        # batcher, so admission and the batcher's coalescing deadline can
+        # never disagree about 'now'.  Compute-cost durations (_observe
+        # timing) stay on time.perf_counter: they measure the device.
+        self.clock = clock
         self.injector = injector
         self.admission = admission
         self.on_fault = on_fault
@@ -284,6 +298,7 @@ class ControlPlane:
     def register_image_model(self, name: str, serve_fn: Callable,
                              proto: np.ndarray, *, warmup: bool = False,
                              **kw) -> ImageBackend:
+        kw.setdefault("clock", self.clock)   # one clock, both layers
         be = ImageBackend(name, serve_fn, proto, **kw)
         self._register(name, be)
         if warmup:
@@ -318,13 +333,15 @@ class ControlPlane:
                              f"(registered: {sorted(self.backends)})")
         self.submitted += 1
         self._submitted_by_class[req.priority] += 1
+        if req.t_arrival is None:
+            req.t_arrival = self.clock()
         if self._t_first is None:
-            self._t_first = time.perf_counter()
+            self._t_first = self.clock()
         ddl = req.deadline
         if ddl is not None and self.admission:
             ahead = self._ahead_of(req)
             est = self.backends[req.model].estimate_s(ahead, req)
-            if est is not None and time.perf_counter() + est > ddl:
+            if est is not None and self.clock() + est > ddl:
                 req.status = "rejected"
                 req.reason = (f"admission: backlog estimate {est * 1e3:.2f} "
                               f"ms blows slo {req.slo_ms:.2f} ms")
@@ -371,7 +388,7 @@ class ControlPlane:
     def pump(self, *, drain: bool = False) -> list[ServeRequest]:
         """One scheduling round: advance every LM backend a step, launch at
         most one image bucket; returns the requests completed."""
-        now = time.perf_counter()
+        now = self.clock()
         finished = self._pump_lm(now)
         due = [n for n, b in self.backends.items()
                if isinstance(b, ImageBackend) and self._launch_due(n, now,
@@ -455,7 +472,7 @@ class ControlPlane:
             self._on_failure(be, reqs, e)
             return []
         self._observe(be.name, bucket, time.perf_counter() - t0)
-        now = time.perf_counter()
+        now = self.clock()
         for r, out in zip(reqs, outs):
             r.out = out
             r.t_done = now
@@ -468,7 +485,7 @@ class ControlPlane:
         self._served_rids.add(r.rid)
         r.status = "served"
         self.done.append(r)
-        self._t_last = time.perf_counter()
+        self._t_last = self.clock()
 
     def _on_failure(self, be, live: list[ServeRequest], err: Exception):
         """The fault ladder, rung one: discard the dead launch, re-queue

@@ -63,13 +63,17 @@ from repro.serving.metrics import latency_stats
 class ImageRequest:
     rid: int
     payload: np.ndarray                    # (z_dim,) latent or (H, W, C) image
-    t_arrival: float = dataclasses.field(default_factory=time.perf_counter)
+    # None = stamped by the batcher's injected clock at submit (open-loop
+    # drivers stamp scheduled arrivals explicitly, in the same clock domain)
+    t_arrival: Optional[float] = None
     t_done: Optional[float] = None
     out: Optional[np.ndarray] = None
 
     @property
     def latency_s(self) -> Optional[float]:
-        return None if self.t_done is None else self.t_done - self.t_arrival
+        if self.t_done is None or self.t_arrival is None:
+            return None
+        return self.t_done - self.t_arrival
 
 
 class DynamicImageBatcher:
@@ -84,11 +88,19 @@ class DynamicImageBatcher:
     def __init__(self, serve_fn: Callable, *,
                  buckets: Sequence[int] = BATCH_BUCKETS,
                  max_wait_ms: float = 2.0, dist=None,
-                 cache=None, cache_key: Optional[str] = None):
+                 cache=None, cache_key: Optional[str] = None,
+                 clock: Callable[[], float] = time.perf_counter):
         self.buckets = tuple(sorted(int(b) for b in buckets))
         if not self.buckets or self.buckets[0] < 1:
             raise ValueError(f"bad buckets {buckets}")
         self.max_wait_s = max_wait_ms / 1e3
+        # ONE monotonic clock for every scheduling timestamp (arrival,
+        # max-wait expiry, completion).  The control plane injects its own
+        # clock here so a request can't be admitted under one clock and
+        # deadline-expired under another; compute-cost *durations*
+        # (``warmup`` timing loops) stay on ``time.perf_counter`` — they
+        # measure the device, not the schedule.
+        self.clock = clock
         # bucket-cost persistence: a repro.core.autotune.RouteCache plus a
         # key naming the served model (costs are per model + per host)
         self.cache = cache
@@ -142,8 +154,10 @@ class DynamicImageBatcher:
 
     # -- client API ----------------------------------------------------------
     def submit(self, req: ImageRequest):
+        if req.t_arrival is None:
+            req.t_arrival = self.clock()
         if self._t_first is None:
-            self._t_first = time.perf_counter()
+            self._t_first = self.clock()
         self.queue.append(req)
 
     def bucket_for(self, n: int) -> int:
@@ -219,7 +233,7 @@ class DynamicImageBatcher:
         requests completed by that launch (empty when still coalescing)."""
         if not self.queue:
             return []
-        now = time.perf_counter()
+        now = self.clock()
         full = len(self.queue) >= self.buckets[-1]
         expired = now - self.queue[0].t_arrival >= self.max_wait_s
         if not (full or expired or drain):
@@ -237,7 +251,7 @@ class DynamicImageBatcher:
             self.submit(r)
         while self.queue:
             if not self.pump(drain=drain) and not drain and self.queue:
-                wait = self.max_wait_s - (time.perf_counter()
+                wait = self.max_wait_s - (self.clock()
                                           - self.queue[0].t_arrival)
                 if wait > 0:
                     time.sleep(min(wait, 1e-3))
@@ -264,7 +278,7 @@ class DynamicImageBatcher:
     def _launch(self, reqs: list[ImageRequest],
                 bucket: Optional[int] = None) -> list[ImageRequest]:
         out = self.execute([r.payload for r in reqs], bucket)
-        now = time.perf_counter()
+        now = self.clock()
         for i, r in enumerate(reqs):
             r.out = out[i]
             r.t_done = now

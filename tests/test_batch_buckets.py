@@ -192,3 +192,46 @@ def test_executors_never_touch_the_byte_cap():
     for fn in (planmod._transposed_fwd, planmod._single_fwd,
                planmod._ps_bwd):
         assert "route_for_batch" in inspect.getsource(fn), fn.__name__
+
+
+# ---------------------------------------------------------------------------
+# zoo-wide route_for_batch property: round-up identity + per-plan memo
+# ---------------------------------------------------------------------------
+
+ODD_BATCHES = (2, 3, 5, 17, 65, 100)
+
+
+def test_route_for_batch_property_over_the_whole_zoo():
+    """For EVERY model-zoo site (fig7 GANs, VAE, SegNet, the dilated bench
+    suite, the U-Net — int8 twins and convplane tilings included) and a
+    spread of non-bucket batches: an in-range batch returns the round-up
+    bucket's route *object* (identity, not equality — callers key compiled
+    executables on it), an oversize batch returns an exactly-sized memoized
+    route, and the oversize memo is per-plan state that never aliases
+    across specs or survives a ``with_routes`` copy."""
+    from tools.gen_route_table import route_specs
+
+    plans = [(name, plan_conv(spec)) for name, spec in route_specs()]
+    largest = BATCH_BUCKETS[-1]
+    for name, plan in plans:
+        for b in ODD_BATCHES:
+            r = plan.route_for_batch(b)
+            if b <= largest:
+                bucket = next(rt for rt in plan.routes if b <= rt.batch)
+                assert r is bucket, (name, b)
+            else:
+                assert r.batch == b, (name, b)
+                assert plan.route_for_batch(b) is r, (name, b)  # memo hit
+    # the oversize memo belongs to the plan instance, not the class.
+    # Dedupe by plan identity first: sites with identical normalized specs
+    # legitimately share one cached ConvPlan (and therefore one memo).
+    distinct = {id(plan): plan for _, plan in plans}.values()
+    memos = [id(p._xl_routes) for p in distinct]
+    assert len(set(memos)) == len(memos), "aliased _xl_routes dicts"
+    # a with_routes sibling starts with a fresh, empty memo
+    name0, plan0 = plans[0]
+    sib = plan0.with_routes(plan0.routes)
+    assert sib._xl_routes == {} and sib._xl_routes is not plan0._xl_routes
+    r65 = sib.route_for_batch(65)
+    assert r65.batch == 65 and 65 in sib._xl_routes
+    assert sib._xl_routes is not plan0._xl_routes

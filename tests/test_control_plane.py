@@ -366,3 +366,52 @@ def test_no_slo_requests_never_rejected_or_shed():
     assert st["served"] == 70 and st["rejected"] == 0 and st["shed"] == 0
     assert st["goodput_under_slo"] == 1.0
     assert all(r.in_slo is None for r in cp.done)
+
+
+# ---------------------------------------------------------------------------
+# one injected clock across both scheduling layers
+# ---------------------------------------------------------------------------
+
+def test_injected_clock_is_shared_and_max_wait_boundary_is_exact():
+    """Admission/shed (control plane) and max-wait coalescing (batcher)
+    run on ONE injected monotonic clock.  The boundary probe — a partial
+    bucket whose oldest request has waited exactly ``max_wait`` — launches
+    at the boundary and not a tick before.  Under mixed clocks this test
+    fails: a real ``perf_counter`` "now" against a fake-clock arrival
+    stamp makes the wait look like hours, launching on the first pump."""
+    t = [0.0]                     # epoch 0: boundary sums stay exact floats
+    cp, be = echo_plane(costs=ECHO_COSTS, clock=lambda: t[0])
+    assert be.batcher.clock is cp.clock           # one clock, both layers
+
+    req = ServeRequest(rid=0, model="echo", payload=payloads(1)[0])
+    assert cp.submit(req)
+    assert req.t_arrival == 0.0                   # stamped by the fake clock
+
+    wait = be.max_wait_s
+    t[0] = wait - 1e-6                            # one microsecond early
+    assert cp.pump() == []                        # partial bucket: coalesce
+    assert req.status == "queued"
+
+    t[0] = wait                                   # exactly max_wait
+    done = cp.pump()
+    assert [r.rid for r in done] == [0]
+    np.testing.assert_allclose(done[0].out, req.payload * 2.0)
+    # completion timestamps come from the same clock domain
+    assert done[0].t_done == t[0]
+    assert done[0].latency_s == pytest.approx(wait)
+
+
+def test_injected_clock_governs_shed_and_deadline():
+    """Deadline math (admission estimate, shed-on-expiry) must use the
+    injected clock too — a request whose SLO expires in fake time is shed
+    even though zero real time elapsed."""
+    t = [0.0]
+    cp, _ = echo_plane(costs=ECHO_COSTS, clock=lambda: t[0])
+    req = ServeRequest(rid=1, model="echo", payload=payloads(1)[0],
+                       slo_ms=5.0)
+    assert cp.submit(req)
+    t[0] = 0.1                                    # 100 ms of fake time
+    assert cp.pump(drain=True) == []
+    assert req.status == "shed" and "deadline passed" in req.reason
+    st = cp.stats()
+    assert st["shed"] == 1 and st["served"] == 0

@@ -304,10 +304,19 @@ def test_quant_fused_tap_is_single_gemm():
 
 
 def test_quant_fused_plane_is_single_gemm():
-    """The cGAN geometry routes fused_plane; quantized: one dot_general."""
-    pq, jaxpr = _quant_jaxpr("transposed", 8, 8, 16, 8, 4, 4, (2, 2),
-                             ((1, 3), (1, 3)), "xla")
-    assert pq.path == "fused_plane", pq.path
+    """fused_plane quantized: one dot_general.  The cGAN k=4/s=2 geometry
+    now routes pixel_shuffle by heuristic (the sub-pixel rewrite — also a
+    single dequantized GEMM, proved in tests/test_pixel_shuffle.py), so
+    the interleaved executor's proof forces the route it replaced."""
+    pq, jaxpr0 = _quant_jaxpr("transposed", 8, 8, 16, 8, 4, 4, (2, 2),
+                              ((1, 3), (1, 3)), "xla")
+    assert pq.path == "pixel_shuffle", pq.path
+    assert count_eqns(jaxpr0.jaxpr, "dot_general") == 1
+    forced = pq.with_routes(tuple(
+        dataclasses.replace(r, path="fused_plane") for r in pq.routes))
+    x = jnp.zeros((2, 8, 8, 16), jnp.float32)
+    wq = forced.pack(jnp.zeros((4, 4, 16, 8), jnp.float32))
+    jaxpr = jax.make_jaxpr(forced.apply)(x, wq)
     assert count_eqns(jaxpr.jaxpr, "dot_general") == 1
     assert count_eqns(jaxpr.jaxpr, "pallas_call") == 0
 

@@ -351,3 +351,46 @@ def test_degrade_replans_spatial_tiles():
                                    rtol=1e-4, atol=1e-5)
     print('spatial degrade re-plan OK')
     """)
+
+
+# ---------------------------------------------------------------------------
+# infeasible-tiling warning: named, once per spec, fallback untouched
+# ---------------------------------------------------------------------------
+
+def test_infeasible_tiling_warns_once_and_falls_back_bit_equal():
+    """A transposed spec with non-uniform phases that *requests* device
+    tiling must not silently plan single-device: a RuntimeWarning names
+    the spec and the reason, exactly once per process — surviving
+    ``plan_cache_clear()`` — and the fallback plan's output is bit-equal
+    to the ``spatial=(1, 1)`` twin (the verdict vanishes, the math
+    doesn't)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.plan import plan_cache_clear
+
+    def spec(tiles):
+        # k=3 s=2: phases carry 2 and 1 taps -> no uniform block tiling
+        return ConvSpec(kind="transposed", in_hw=(24, 24), in_c=6, out_c=10,
+                        kernel_hw=(3, 3), strides=(2, 2),
+                        padding=((1, 0), (1, 0)), backend="xla",
+                        spatial=tiles)
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        plan = plan_conv(spec((2, 2)))
+        plan_cache_clear()              # re-derives the geometry...
+        plan2 = plan_conv(spec((2, 2)))
+    hits = [w for w in rec if issubclass(w.category, RuntimeWarning)
+            and "spatial_plan" in str(w.message)]
+    assert len(hits) == 1, [str(w.message) for w in rec]   # ...but warns once
+    msg = str(hits[0].message)
+    assert "spatial=(2, 2)" in msg and "transposed" in msg
+    assert "non-uniform" in msg and "planning single-device" in msg
+
+    assert all(r.dev_tiles is None for r in plan.routes)
+    twin = plan_conv(spec((1, 1)))
+    k = jax.random.normal(jax.random.PRNGKey(0), (3, 3, 6, 10), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 24, 6), jnp.float32)
+    got = np.asarray(plan2.apply(x, plan2.pack(k)))
+    want = np.asarray(twin.apply(x, twin.pack(k)))
+    np.testing.assert_array_equal(got, want)    # bit-equal, not just close

@@ -97,6 +97,13 @@ def route_specs():
         kind="conv", in_hw=(385, 385), in_c=64, out_c=256,
         kernel_hw=(7, 7), padding=((3, 3), (3, 3)))))
 
+    # the diffusion U-Net: every conv kind in one model — strided downs,
+    # dilated bottleneck, transposed ups (pixel_shuffle-eligible k=4 s=2
+    # geometry), skip-fuse convs — pinning the sub-pixel route verdicts
+    from repro.models.unet import UNET, unet_sites
+    for site, spec in unet_sites(UNET):
+        specs.append((f"unet_{site}", spec))
+
     # quantized twins of every model-zoo site: int8 superpacks change only
     # the *weight* itemsize in the VMEM accounting, so any Route flip the
     # 1-byte tiles cause (taps/tiled → whole-plane, bigger sp_tiles) is
